@@ -1,0 +1,120 @@
+"""Shared benchmark utilities: AUC, timing, tiny train loop."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.interest import InterestConfig
+from repro.data.pipeline import DeterministicStream
+from repro.data.synthetic import (SyntheticCTRConfig, generate_batch,
+                                  generate_batch_graded)
+from repro.models.ctr import CTRModel, CTRConfig
+from repro.train.loop import make_train_step
+from repro.train.optimizer import OptimizerConfig
+
+
+def auc(labels: np.ndarray, scores: np.ndarray) -> float:
+    """Mann-Whitney AUC (tie-aware via average ranks)."""
+    order = np.argsort(scores, kind="mergesort")
+    ranks = np.empty_like(order, dtype=np.float64)
+    sorted_scores = scores[order]
+    i = 0
+    r = np.arange(1, len(scores) + 1, dtype=np.float64)
+    while i < len(scores):
+        j = i
+        while j + 1 < len(scores) and sorted_scores[j + 1] == sorted_scores[i]:
+            j += 1
+        r[i : j + 1] = 0.5 * (i + 1 + j + 1)
+        i = j + 1
+    ranks[order] = r
+    pos = labels > 0.5
+    n_pos, n_neg = int(pos.sum()), int((~pos).sum())
+    if n_pos == 0 or n_neg == 0:
+        return 0.5
+    return float((ranks[pos].sum() - n_pos * (n_pos + 1) / 2) / (n_pos * n_neg))
+
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 10) -> float:
+    """Median wall time per call in microseconds (blocking on result)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return 1e6 * float(np.median(ts))
+
+
+# ---------------------------------------------------------------------------
+# the offline-experiment protocol of the paper (Taobao-like, synthetic)
+# ---------------------------------------------------------------------------
+def paper_data_config(long_len: int = 256) -> SyntheticCTRConfig:
+    return SyntheticCTRConfig(
+        n_items=8000, n_cats=80, hist_len=long_len, short_len=16,
+        n_interests=5, session_len=16, label_noise=0.05,
+    )
+
+
+def paper_model_config(kind: str, long_len: int = 256, m: int = 48,
+                       tau: int = 3, top_k: int = 32) -> CTRConfig:
+    return CTRConfig(
+        arch="din", n_items=8000, n_cats=80, embed_dim=16,
+        short_len=16, long_len=long_len, mlp_hidden=(64, 32), ctx_dim=4,
+        emb_init=0.25,  # organized-enough geometry for softmax TA to train
+        interest=InterestConfig(kind=kind, m=m, tau=tau, top_k=top_k),
+    )
+
+
+def train_and_eval(
+    kind: str,
+    steps: int = 300,
+    batch: int = 128,
+    eval_examples: int = 8192,
+    long_len: int = 256,
+    seed: int = 0,
+    lr: float = 2e-3,
+    **interest_kw,
+):
+    """Train one CTR model variant on the planted-structure data; returns
+    dict(kind, auc, train_s, us_per_step)."""
+    dcfg = paper_data_config(long_len)
+    mcfg = paper_model_config(kind, long_len, **interest_kw)
+    model = CTRModel(mcfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    loss_fn = lambda p, b: model.loss(p, b)[0]
+    opt = OptimizerConfig(kind="adamw", lr=lr)
+    init_state, step_fn = make_train_step(loss_fn, opt, donate=False)
+    state = init_state(params)
+
+    stream = DeterministicStream(lambda s: generate_batch_graded(dcfg, batch, s),
+                                 base_seed=seed)
+    # warm-up compile outside the timed region
+    b0 = {k: jnp.asarray(v) for k, v in next(stream).items()}
+    state, _ = step_fn(state, b0)
+    t0 = time.perf_counter()
+    for _ in range(steps - 1):
+        b = {k: jnp.asarray(v) for k, v in next(stream).items()}
+        state, metrics = step_fn(state, b)
+    jax.block_until_ready(metrics["loss"])
+    train_s = time.perf_counter() - t0
+
+    # eval on held-out seeds
+    apply = jax.jit(model.apply)
+    scores, labels = [], []
+    eval_bs = 1024
+    for i in range(eval_examples // eval_bs):
+        eb = generate_batch_graded(dcfg, eval_bs, 10_000_000 + i)
+        s = apply(state["params"], {k: jnp.asarray(v) for k, v in eb.items()})
+        scores.append(np.asarray(s))
+        labels.append(eb["label"])
+    a = auc(np.concatenate(labels), np.concatenate(scores))
+    return {
+        "kind": kind,
+        "auc": round(a, 4),
+        "train_s": round(train_s, 2),
+        "us_per_step": round(1e6 * train_s / max(steps - 1, 1), 1),
+    }

@@ -1,0 +1,85 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only table1,...]
+
+Prints ``name,us_per_call,derived`` CSV (plus a roofline summary read from
+the dry-run artifacts, if present).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import glob
+import os
+import sys
+import time
+import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+ALL = ["fig2", "table1", "table23", "table4", "fig5", "table5"]
+
+
+def _module(name: str):
+    import importlib
+
+    return importlib.import_module({
+        "fig2": "benchmarks.fig2_attention_patterns",
+        "table1": "benchmarks.table1_complexity",
+        "table23": "benchmarks.table23_auc",
+        "table4": "benchmarks.table4_tau",
+        "fig5": "benchmarks.fig5_m_sweep",
+        "table5": "benchmarks.table5_serving",
+    }[name])
+
+
+def roofline_rows() -> list[dict]:
+    rows = []
+    for f in sorted(glob.glob("results/dryrun/*/*.json")):
+        r = json.load(open(f))
+        rf = r.get("roofline_fraction")
+        rows.append({
+            "name": f"roofline/{r['mesh']}/{r['arch']}/{r['shape']}"
+                    + ("" if r.get("variant", "baseline") == "baseline"
+                       else f"+{r['variant']}"),
+            "us_per_call": 1e6 * max(r["t_compute_s"], r["t_memory_s"],
+                                     r["t_collective_s"]),
+            "derived": f"bottleneck={r['bottleneck']};"
+                       f"hbm={r['hbm_total_per_chip_gib']}GiB;"
+                       f"fits={r['fits_16gib']};"
+                       f"roofline_frac={rf if rf is None else round(rf, 4)}",
+        })
+    return rows
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--full", action="store_true", help="long training runs")
+    p.add_argument("--only", default=None)
+    args = p.parse_args()
+    todo = args.only.split(",") if args.only else ALL
+
+    print("name,us_per_call,derived")
+    failures = []
+    for name in todo:
+        t0 = time.time()
+        try:
+            rows = _module(name).run(quick=not args.full)
+            for r in rows:
+                print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+        except Exception as e:
+            traceback.print_exc(file=sys.stderr)
+            failures.append((name, repr(e)))
+        print(f"# {name} done in {time.time() - t0:.0f}s", file=sys.stderr)
+
+    for r in roofline_rows():
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+
+    if failures:
+        print(f"# FAILURES: {failures}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Table 1 — time complexity of interest-modeling methods.
+
+Measures wall time of the *user-interest op* alone at the paper's serving
+granularity: one user's length-L sequence scored against B candidates
+(their system: B≈10³, L=1024, m=48, d=128). Sweeps L and B to expose the
+complexity classes:
+
+    DIN   O(B·L·d)        — full target attention per candidate
+    SIM   O(B·k·d)+filter — category top-k then TA
+    ETA   O(B·L·m)+O(B·k·d) — hamming retrieval then TA
+    SDIM  O(L·m·log d + B·m·log d), and with BSE decoupling the CTR-server
+          part is O(B·m·log d) — L-FREE (the paper's headline property).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import time_fn
+from repro.core import bse, retrieval, sdim, simhash
+from repro.core.target_attention import target_attention
+
+
+def run(quick: bool = True):
+    d, m, tau, k = 128, 48, 3, 48
+    Ls = [256, 1024] if quick else [256, 1024, 4096, 16384]
+    Bs = [128, 1024] if quick else [128, 1024, 4096]
+    key = jax.random.PRNGKey(0)
+    R = simhash.make_hashes(key, m, d)
+
+    ta = jax.jit(lambda q, s, mk: target_attention(q, s, mk))
+    sd = jax.jit(lambda q, s, mk: sdim.sdim_attention(q, s, mk, R, tau))
+    enc = jax.jit(lambda s, mk: bse.encode_sequence(s, mk, R, tau))
+    qry = jax.jit(lambda t, q: bse.query_interest(t, q, R, tau))
+    et = jax.jit(lambda q, s, mk: retrieval.eta(q, s, mk, R, k))
+
+    rows = []
+    for L in Ls:
+        seq = jax.random.normal(jax.random.PRNGKey(1), (1, L, d))
+        mask = jnp.ones((1, L))
+        table = enc(seq, mask)
+        for B in Bs:
+            q = jax.random.normal(jax.random.PRNGKey(2), (1, B, d))
+            t_ta = time_fn(ta, q, seq, mask)
+            t_sdim = time_fn(sd, q, seq, mask)
+            t_bse_q = time_fn(qry, table, q)       # CTR-server cost only
+            t_eta = time_fn(et, q, seq, mask)
+            rows += [
+                {"name": f"table1/din_L{L}_B{B}", "us_per_call": t_ta,
+                 "derived": f"speedup_vs_din=1.0"},
+                {"name": f"table1/sdim_L{L}_B{B}", "us_per_call": t_sdim,
+                 "derived": f"speedup_vs_din={t_ta / t_sdim:.2f}"},
+                {"name": f"table1/sdim_bse_query_L{L}_B{B}", "us_per_call": t_bse_q,
+                 "derived": f"speedup_vs_din={t_ta / t_bse_q:.2f}"},
+                {"name": f"table1/eta_L{L}_B{B}", "us_per_call": t_eta,
+                 "derived": f"speedup_vs_din={t_ta / t_eta:.2f}"},
+            ]
+    # L-freeness: BSE-query time ratio between largest and smallest L at fixed B
+    q_times = {L: [r for r in rows if r["name"] == f"table1/sdim_bse_query_L{L}_B{Bs[-1]}"][0]
+               for L in Ls}
+    ratio = q_times[Ls[-1]]["us_per_call"] / q_times[Ls[0]]["us_per_call"]
+    rows.append({"name": "table1/bse_query_L_scaling", "us_per_call": 0.0,
+                 "derived": f"t(L={Ls[-1]})/t(L={Ls[0]})={ratio:.2f}_(1.0=L-free)"})
+    return rows

@@ -1,0 +1,76 @@
+"""End-to-end training driver: the paper's CTR model (Fig. 3) with SDIM
+long-term interest, full substrate engaged — deterministic restartable data
+stream, adagrad, grad accumulation, async atomic checkpoints, straggler
+watchdog, preemption-safe.
+
+    PYTHONPATH=src python examples/train_ctr.py \
+        --steps 200 --batch 256 --n-items 500000 --ckpt /tmp/sdim_ckpt
+
+Resume is automatic: re-run the same command after killing it mid-way and
+the loop restores the latest checkpoint + skips the stream ahead.
+"""
+import argparse
+import signal
+import threading
+
+import jax
+
+from repro.core.interest import InterestConfig
+from repro.data.pipeline import DeterministicStream
+from repro.data.synthetic import SyntheticCTRConfig, generate_batch_graded
+from repro.models.ctr import CTRModel, CTRConfig
+from repro.nn.module import tree_size
+from repro.train.loop import LoopConfig, run
+from repro.train.optimizer import OptimizerConfig
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--steps", type=int, default=200)
+    p.add_argument("--batch", type=int, default=256)
+    p.add_argument("--n-items", type=int, default=500_000)
+    p.add_argument("--embed-dim", type=int, default=64)
+    p.add_argument("--long-len", type=int, default=512)
+    p.add_argument("--grad-accum", type=int, default=2)
+    p.add_argument("--compress", default=None, choices=[None, "int8", "bf16"])
+    p.add_argument("--ckpt", default="/tmp/sdim_ctr_ckpt")
+    args = p.parse_args()
+
+    dcfg = SyntheticCTRConfig(n_items=args.n_items, n_cats=2000,
+                              hist_len=args.long_len, short_len=50)
+    mcfg = CTRConfig(
+        arch="din", n_items=args.n_items, n_cats=2000,
+        embed_dim=args.embed_dim, short_len=50, long_len=args.long_len,
+        mlp_hidden=(1024, 512, 256), emb_init=0.05,
+        interest=InterestConfig(kind="sdim", m=48, tau=3),
+    )
+    model = CTRModel(mcfg)
+    params = model.init(jax.random.PRNGKey(0))
+    print(f"model: {tree_size(params) / 1e6:.1f}M params "
+          f"({args.n_items} items x {args.embed_dim})")
+
+    # graceful preemption: SIGTERM/SIGINT -> save + exit
+    preempt = threading.Event()
+    signal.signal(signal.SIGTERM, lambda *_: preempt.set())
+
+    stream = DeterministicStream(
+        lambda s: generate_batch_graded(dcfg, args.batch, s), base_seed=17)
+    out = run(
+        loss_fn=lambda p, b: model.loss(p, b)[0],
+        params=params,
+        stream=stream,
+        opt_cfg=OptimizerConfig(kind="adagrad", lr=0.05, clip_norm=10.0),
+        loop_cfg=LoopConfig(n_steps=args.steps, log_every=10, ckpt_every=50,
+                            ckpt_dir=args.ckpt, grad_accum=args.grad_accum,
+                            compress=args.compress),
+        preempt_event=preempt,
+        log_fn=lambda s, m: print(
+            f"step {s:5d}  loss {m['loss']:.4f}  lr {m['lr']:.4f}  "
+            f"{m['step_time_s'] * 1e3:.0f} ms/step"),
+    )
+    print(f"stopped at step {out['stopped_at']}; "
+          f"straggler flags: {out['watchdog'].flags}")
+
+
+if __name__ == "__main__":
+    main()

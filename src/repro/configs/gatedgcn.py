@@ -1,0 +1,9 @@
+"""gatedgcn [arXiv:2003.00982 benchmarking-gnns]: 16L d_hidden=70, gated
+edge-feature aggregator. Per-shape d_feat/n_classes set by the registry."""
+from repro.models.gnn import GatedGCNConfig
+
+FAMILY = "gnn"
+
+FULL = GatedGCNConfig(n_layers=16, d_hidden=70, d_feat=1433, n_classes=7)
+
+SMOKE = GatedGCNConfig(n_layers=3, d_hidden=16, d_feat=32, n_classes=4, remat=False)

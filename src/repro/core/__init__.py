@@ -1,0 +1,4 @@
+# The paper's primary contribution — implement the SYSTEM here
+# (scheduler, optimizer, data path, serving loop, etc.) in the
+# host framework. Add sibling subpackages for substrates.
+from repro.core import bse, interest, retrieval, sdim, simhash, target_attention  # noqa: F401

@@ -1,0 +1,102 @@
+"""Long-term user-interest module factory.
+
+Every CTR model in this framework takes its long-term interest module as a
+config string (paper claim: SDIM is architecture-free, §4.4). The factory
+returns an object with ``init(key) -> params`` and
+``apply(params, q, seq, mask, seq_cat=None, q_cat=None) -> (…, d)``.
+
+kinds: "sdim" (paper) | "sdim_expected" (Eq. 14 infinite-hash limit) |
+       "target" (DIN long-seq oracle) | "din_mlp" (activation-unit DIN) |
+       "avg" | "sim_hard" | "eta" | "ubr4ctr" | "none".
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import retrieval, sdim, simhash
+from repro.core.target_attention import DinActivationUnit, target_attention
+
+
+@dataclasses.dataclass(frozen=True)
+class InterestConfig:
+    kind: str = "sdim"
+    d: int = 32
+    m: int = 48
+    tau: int = 3
+    top_k: int = 32           # for retrieval baselines
+    hash_seed: int = 1234
+    use_pallas: bool = False  # route SDIM through the fused Pallas kernels
+
+
+class InterestModule:
+    def __init__(self, cfg: InterestConfig):
+        self.cfg = cfg
+        if cfg.kind in ("din_mlp",):
+            self._din = DinActivationUnit(cfg.d)
+        if cfg.kind in ("ubr4ctr",):
+            self._ubr = retrieval.UBR4CTRLite(cfg.d, cfg.top_k)
+
+    # R is a fixed (non-trainable) buffer: stored in params for checkpointing
+    # but excluded from optimizer updates via the "buffers" subtree name.
+    def init(self, key) -> Any:
+        cfg = self.cfg
+        p: dict[str, Any] = {}
+        if cfg.kind in ("sdim", "eta"):
+            p["buffers"] = {
+                "R": simhash.make_hashes(jax.random.PRNGKey(cfg.hash_seed), cfg.m, cfg.d)
+            }
+        if cfg.kind == "din_mlp":
+            p.update(self._din.init(key))
+        if cfg.kind == "ubr4ctr":
+            p.update(self._ubr.init(key))
+        return p
+
+    def apply(
+        self,
+        params: Any,
+        q: jax.Array,               # (B, d) or (B, C, d)
+        seq: jax.Array,             # (B, L, d)
+        mask: Optional[jax.Array],  # (B, L)
+        seq_cat: Optional[jax.Array] = None,
+        q_cat: Optional[jax.Array] = None,
+    ) -> jax.Array:
+        cfg = self.cfg
+        kind = cfg.kind
+        if kind == "none":
+            shape = (*q.shape[:-1], seq.shape[-1])
+            return jnp.zeros(shape, seq.dtype)
+        if kind == "sdim":
+            if cfg.use_pallas:
+                from repro.kernels.sdim_bucket import ops as kops
+
+                return kops.sdim_attention(q, seq, mask, params["buffers"]["R"], cfg.tau)
+            return sdim.sdim_attention(q, seq, mask, params["buffers"]["R"], cfg.tau)
+        if kind == "sdim_expected":
+            return sdim.sdim_expected_attention(q, seq, mask, cfg.tau)
+        if kind == "target":
+            return target_attention(q, seq, mask)
+        if kind == "din_mlp":
+            return self._din.apply(params, q, seq, mask)
+        if kind == "avg":
+            out = retrieval.avg_pooling(seq, mask)
+            return out if q.ndim == 2 else jnp.broadcast_to(
+                out[:, None, :], (*q.shape[:-1], seq.shape[-1])
+            )
+        if kind == "sim_hard":
+            assert seq_cat is not None and q_cat is not None
+            return retrieval.sim_hard(q, seq, mask, seq_cat, q_cat, cfg.top_k)
+        if kind == "eta":
+            return retrieval.eta(q, seq, mask, params["buffers"]["R"], cfg.top_k)
+        if kind == "ubr4ctr":
+            return self._ubr.apply(params, q, seq, mask)
+        raise ValueError(f"unknown interest kind: {kind}")
+
+
+INTEREST_KINDS = (
+    "sdim", "sdim_expected", "target", "din_mlp", "avg",
+    "sim_hard", "eta", "ubr4ctr", "none",
+)

@@ -1,0 +1,67 @@
+"""Target attention (DIN, paper §3.2) — the oracle SDIM approximates.
+
+Two flavors:
+* ``target_attention``     — scaled-dot softmax TA (paper Eq. 3/4); this is
+  what SDIM's collision kernel approximates and what Table 1 calls O(BLd).
+* ``din_activation_unit``  — DIN's original MLP "activation unit" scoring
+  a(q, s) = MLP([q, s, q−s, q⊙s]); used by the DIN baseline model.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import MLP
+from repro.nn.module import KeyGen
+
+
+def target_attention(
+    q: jax.Array,              # (B, d) or (B, C, d)
+    seq: jax.Array,            # (B, L, d)
+    mask: Optional[jax.Array], # (B, L)
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """softmax(q·Sᵀ/√d) S — output (B, d) or (B, C, d)."""
+    d = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(jnp.float32(d))
+    single = q.ndim == 2
+    qc = q[:, None, :] if single else q                      # (B, C, d)
+    scores = jnp.einsum("bcd,bld->bcl", qc.astype(jnp.float32),
+                        seq.astype(jnp.float32)) * scale
+    if mask is not None:
+        scores = jnp.where(mask[:, None, :] > 0, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bcl,bld->bcd", probs, seq.astype(jnp.float32)).astype(seq.dtype)
+    return out[:, 0] if single else out
+
+
+class DinActivationUnit:
+    """Parametric DIN attention: weights from an MLP over [q, s, q−s, q⊙s].
+
+    DIN does NOT softmax-normalize the scores (paper footnote in DIN §4.3:
+    weights preserve interest intensity); we keep sigmoid-scaled raw weights.
+    """
+
+    def __init__(self, d: int, hidden=(36,)):
+        self.d = d
+        self.mlp = MLP(4 * d, [*hidden, 1], activation="relu")
+
+    def init(self, key) -> Any:
+        return {"mlp": self.mlp.init(key)}
+
+    def apply(self, params, q, seq, mask=None):
+        single = q.ndim == 2
+        qc = q[:, None, :] if single else q                  # (B, C, d)
+        B, C, d = qc.shape
+        L = seq.shape[1]
+        qe = jnp.broadcast_to(qc[:, :, None, :], (B, C, L, d))
+        se = jnp.broadcast_to(seq[:, None, :, :], (B, C, L, d))
+        feats = jnp.concatenate([qe, se, qe - se, qe * se], axis=-1)
+        w = jax.nn.sigmoid(self.mlp.apply(params["mlp"], feats)[..., 0])  # (B,C,L)
+        if mask is not None:
+            w = w * mask[:, None, :].astype(w.dtype)
+        out = jnp.einsum("bcl,bld->bcd", w.astype(jnp.float32),
+                         seq.astype(jnp.float32)).astype(seq.dtype)
+        return out[:, 0] if single else out

@@ -1,0 +1,65 @@
+"""MeshCtx: how a model run maps onto mesh axes.
+
+``data_axes`` may be a tuple (multi-pod: the pod axis is folded into DP) or
+None (tokens replicated — used by decode steps where batch < DP degree, e.g.
+long_500k B=1, so expert-parallel MoE dispatch runs without a token shard).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from jax.sharding import Mesh
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshCtx:
+    mesh: Mesh
+    data_axes: Optional[Tuple[str, ...]] = ("data",)
+    model_axis: str = "model"
+    # KV-cache sequence-parallel axes for split-KV decode (flash-decoding):
+    # decode_32k -> ("model",) with batch over data; long_500k -> all axes.
+    seq_axes: Optional[Tuple[str, ...]] = None
+    # Megatron sequence parallelism: residual stream sharded (B over data,
+    # T over model) between layers; GSPMD inserts the all-gather/
+    # reduce-scatter pair around each block. Cuts saved-activation memory by
+    # TP× (40×536 MB -> 40×34 MB on granite train_4k).
+    act_seq_shard: bool = False
+    # manual Megatron-TP FFN with explicit bf16 all-gather + psum_scatter
+    # (distributed/manual_tp.py) — GSPMD's AR path is not steerable (§Perf)
+    manual_tp: bool = False
+
+    def constrain(self, x, *spec):
+        """with_sharding_constraint against this ctx's mesh."""
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*spec)))
+
+    def constrain_residual(self, x):
+        """(B, T, d) residual: B over DP axes, T over the model axis."""
+        if not self.act_seq_shard or x.shape[1] == 1:
+            return x
+        return self.constrain(x, self.data_axes, self.model_axis, None)
+
+    @staticmethod
+    def wrap(m) -> "MeshCtx | None":
+        if m is None or isinstance(m, MeshCtx):
+            return m
+        return MeshCtx(mesh=m)
+
+    def for_decode(self) -> "MeshCtx":
+        return dataclasses.replace(self, data_axes=None)
+
+    @property
+    def dp(self) -> int:
+        if not self.data_axes:
+            return 1
+        return int(
+            __import__("math").prod(self.mesh.shape[a] for a in self.data_axes)
+        )
+
+    @property
+    def ep(self) -> int:
+        return self.mesh.shape[self.model_axis]

@@ -1,0 +1,163 @@
+"""Per-family parameter/activation PartitionSpec rules.
+
+Mesh convention: ``("data", "model")`` single pod, ``("pod", "data", "model")``
+multi-pod (pod folds into DP). Rules are path-substring matchers over
+normalized param paths (``stack/attn/wq/w``), rank-adaptive: the spec matches
+the TRAILING dims, leading dims (e.g. the scanned layer axis) get None.
+
+Layouts:
+  * LM — Megatron TP on the model axis (attention heads / FFN width / vocab),
+    expert dim for MoE (matches the shard_map EP in nn/moe.py), shared-expert
+    width TP; embeddings and lm_head vocab-sharded.
+  * recsys — embedding tables row-sharded over model (the 10⁶–10⁹-row
+    tables ARE the model); dense towers replicated (≪1% of params, avoids
+    TP collectives in the 65k-batch hot path).
+  * gnn — params replicated (70-dim hidden); edges sharded over all axes at
+    the activation level (see models/gnn.py shard_map).
+
+ZeRO-1: ``zero1_spec`` extends a param spec by sharding the largest
+unsharded dim over the data axes for optimizer-state (m/v) placement.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional, Sequence
+
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def normalize_path(path: str) -> str:
+    """jax keystr "['stack']['attn']['wq']['w']" -> "stack/attn/wq/w"."""
+    return "/".join(re.findall(r"\['?([^'\]]+)'?\]|\.(\w+)", path.replace(".", ""))
+                    and [m for tup in re.findall(r"\['?([^'\]]+)'?\]", path) for m in [tup]])
+
+
+def _norm(path: str) -> str:
+    parts = re.findall(r"\['?([^'\]]+)'?\]", path)
+    if parts:
+        return "/".join(parts)
+    return path.strip("/.")
+
+
+# rule table: (substring, trailing spec)
+LM_RULES: list[tuple[str, tuple]] = [
+    ("embed/table", ("model", None)),
+    ("lm_head/w", (None, "model")),
+    ("attn/wq_a/w", (None, None)),
+    ("attn/wkv_a/w", (None, None)),
+    ("attn/wq_b/w", (None, "model")),
+    ("attn/wk_b/w", (None, "model")),
+    ("attn/wv_b/w", (None, "model")),
+    ("attn/wq/w", (None, "model")),
+    ("attn/wk/w", (None, "model")),
+    ("attn/wv/w", (None, "model")),
+    ("attn/wo/w", ("model", None)),
+    ("ffn/experts/wi_gate", ("model", None, None)),
+    ("ffn/experts/wi_up", ("model", None, None)),
+    ("ffn/experts/wo", ("model", None, None)),
+    ("ffn/shared/wi_gate", (None, None, "model")),
+    ("ffn/shared/wi_up", (None, None, "model")),
+    ("ffn/shared/wo", (None, "model", None)),
+    ("ffn/router", (None, None)),
+    ("ffn/wi_gate/w", (None, "model")),
+    ("ffn/wi_up/w", (None, "model")),
+    ("ffn/wo/w", ("model", None)),
+]
+
+RECSYS_RULES: list[tuple[str, tuple]] = [
+    ("item_emb/table", ("model", None)),
+    ("cat_emb/table", ("model", None)),
+    ("field_tables", ("model", None)),
+    ("wide/", ("model", None)),
+]
+
+GNN_RULES: list[tuple[str, tuple]] = []
+
+FAMILY_RULES = {"lm": LM_RULES, "recsys": RECSYS_RULES, "gnn": GNN_RULES}
+
+
+def _pad(tail: tuple, ndim: int) -> Optional[P]:
+    if ndim < len(tail):
+        # leaf is lower-rank than the rule (e.g. bias) -> replicate
+        return P()
+    return P(*([None] * (ndim - len(tail)) + list(tail)))
+
+
+def param_spec(family: str, path: str, shape: tuple) -> P:
+    p = _norm(path)
+    for sub, tail in FAMILY_RULES[family]:
+        if sub in p:
+            spec = _pad(tail, len(shape))
+            return spec if spec is not None else P()
+    return P()
+
+
+def _axis_sizes(mesh: Mesh, axes) -> int:
+    import math
+
+    if isinstance(axes, str):
+        axes = (axes,)
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+def valid_for_mesh(spec: P, shape: tuple, mesh: Mesh) -> P:
+    """Drop shardings that don't divide the dim (e.g. 8 kv-heads on 16-way)."""
+    fixed = []
+    for dim, ax in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if ax is None:
+            fixed.append(None)
+        elif dim % _axis_sizes(mesh, ax) == 0:
+            fixed.append(ax)
+        else:
+            fixed.append(None)
+    while fixed and fixed[-1] is None:
+        fixed.pop()
+    return P(*fixed)
+
+
+def zero1_spec(spec: P, shape: tuple, mesh: Mesh,
+               data_axes: Sequence[str] = ("data",)) -> P:
+    """Optimizer-state spec: additionally shard the largest unsharded dim over
+    the data axes (ZeRO-1 — m/v never replicated across DP)."""
+    tail = tuple(spec) + (None,) * (len(shape) - len(spec))
+    dp = _axis_sizes(mesh, tuple(data_axes))
+    best, best_dim = -1, -1
+    for i, (dim, ax) in enumerate(zip(shape, tail)):
+        if ax is None and dim % dp == 0 and dim > best_dim:
+            best, best_dim = i, dim
+    if best < 0:
+        return valid_for_mesh(spec, shape, mesh)
+    new = list(tail)
+    new[best] = tuple(data_axes) if len(data_axes) > 1 else data_axes[0]
+    return valid_for_mesh(P(*new), shape, mesh)
+
+
+def param_sharding_fn(family: str, mesh: Mesh):
+    """(path, shape) -> NamedSharding, for checkpoint restore / init placement."""
+
+    def fn(path: str, shape: tuple) -> NamedSharding:
+        spec = valid_for_mesh(param_spec(family, path, shape), shape, mesh)
+        return NamedSharding(mesh, spec)
+
+    return fn
+
+
+def shard_params(params, family: str, mesh: Mesh):
+    import jax
+
+    def place(path, leaf):
+        key = jax.tree_util.keystr(path)
+        spec = valid_for_mesh(param_spec(family, key, leaf.shape), leaf.shape, mesh)
+        return jax.device_put(leaf, NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map_with_path(place, params)
+
+
+def opt_state_sharding_fn(family: str, mesh: Mesh, data_axes=("data",)):
+    """ZeRO-1 placement for optimizer m/v trees (same paths as params)."""
+
+    def fn(path: str, shape: tuple) -> NamedSharding:
+        base = param_spec(family, path, shape)
+        return NamedSharding(mesh, zero1_spec(base, shape, mesh, data_axes))
+
+    return fn

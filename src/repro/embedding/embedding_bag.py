@@ -1,0 +1,79 @@
+"""EmbeddingBag for JAX.
+
+JAX has no native ``nn.EmbeddingBag`` (and no CSR sparse) — this implements
+the FBGEMM-style table-batched lookup with ``jnp.take`` + segment reduction,
+which IS part of the system (kernel_taxonomy §RecSys).
+
+Two layouts:
+
+* ``bag_lookup``      — ragged COO layout: flat ``indices`` (N,) +
+  ``segment_ids`` (N,) -> (num_bags, dim) via ``jax.ops.segment_sum`` /
+  ``segment_max``. Used by the data pipeline when bags are very uneven.
+* ``multihot_lookup`` — fixed-shape padded layout (B, n_hot) + mask, the
+  TPU-friendly form used by the CTR models (static shapes, no host ragged
+  metadata); reduction is a masked sum/mean over the hot axis.
+
+Also: ``qr_embedding`` — quotient-remainder compressed tables
+[arXiv:1909.02107] for 10⁸⁺ vocabularies.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bag_lookup(
+    table: jax.Array,       # (V, d)
+    indices: jax.Array,     # (N,) int
+    segment_ids: jax.Array, # (N,) int, which bag each index belongs to
+    num_bags: int,
+    mode: str = "sum",      # "sum" | "mean" | "max"
+    weights: jax.Array | None = None,  # (N,) per-sample weights
+) -> jax.Array:
+    rows = jnp.take(table, indices, axis=0)                     # (N, d)
+    if weights is not None:
+        rows = rows * weights[:, None].astype(rows.dtype)
+    if mode == "sum":
+        return jax.ops.segment_sum(rows, segment_ids, num_bags)
+    if mode == "mean":
+        s = jax.ops.segment_sum(rows, segment_ids, num_bags)
+        c = jax.ops.segment_sum(jnp.ones_like(indices, rows.dtype), segment_ids, num_bags)
+        return s / jnp.maximum(c, 1.0)[:, None]
+    if mode == "max":
+        return jax.ops.segment_max(rows, segment_ids, num_bags)
+    raise ValueError(mode)
+
+
+def multihot_lookup(
+    table: jax.Array,       # (V, d)
+    indices: jax.Array,     # (..., n_hot) int, padded
+    mask: jax.Array | None, # (..., n_hot) 1 = valid; None = all valid
+    mode: str = "sum",
+) -> jax.Array:
+    rows = jnp.take(table, indices, axis=0)                     # (..., n_hot, d)
+    if mask is None:
+        if mode == "sum":
+            return jnp.sum(rows, axis=-2)
+        if mode == "mean":
+            return jnp.mean(rows, axis=-2)
+        raise ValueError(mode)
+    m = mask[..., None].astype(rows.dtype)
+    s = jnp.sum(rows * m, axis=-2)
+    if mode == "sum":
+        return s
+    if mode == "mean":
+        return s / jnp.maximum(jnp.sum(m, axis=-2), 1.0)
+    raise ValueError(mode)
+
+
+def qr_embedding(
+    q_table: jax.Array,     # (ceil(V / buckets), d)
+    r_table: jax.Array,     # (buckets, d)
+    ids: jax.Array,
+    buckets: int,
+    combine: str = "add",   # "add" | "mul"
+) -> jax.Array:
+    """Quotient-remainder trick: emb(id) = Q[id // B] ∘ R[id % B]."""
+    q = jnp.take(q_table, ids // buckets, axis=0)
+    r = jnp.take(r_table, ids % buckets, axis=0)
+    return q + r if combine == "add" else q * r

@@ -1,0 +1,71 @@
+"""Model-parallel sharded embedding tables for the recsys family.
+
+Tables are row-sharded (vocab dim) over the ``model`` mesh axis — the
+standard layout for 10⁶–10⁹-row tables: each device owns V/TP rows and
+lookups become (gather-local + psum) under GSPMD. The helpers here produce
+the PartitionSpecs; actual placement happens in the launcher via
+``NamedSharding`` on the param tree (distributed/sharding.py matches the
+``"tables"`` path).
+
+``FieldSpec``/``EmbeddingCollection`` manage one table per sparse field (the
+wide-deep layout: 40 fields) or a shared id space (BST/DIEN/BERT4Rec item
+tables).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.embedding.embedding_bag import multihot_lookup
+from repro.nn.module import KeyGen
+
+
+@dataclasses.dataclass(frozen=True)
+class FieldSpec:
+    name: str
+    vocab: int
+    dim: int
+    n_hot: int = 1            # 1 = one-hot field; >1 = padded multi-hot bag
+    mode: str = "sum"
+
+
+@dataclasses.dataclass(frozen=True)
+class EmbeddingCollection:
+    fields: Sequence[FieldSpec]
+    init_std: float = 0.01
+
+    def init(self, key):
+        kg = KeyGen(key)
+        return {
+            "tables": {
+                f.name: self.init_std * jax.random.normal(kg(), (f.vocab, f.dim))
+                for f in self.fields
+            }
+        }
+
+    def apply(self, params, batch: dict) -> jax.Array:
+        """batch[f.name]: (B,) ids for one-hot fields, (B, n_hot) for bags
+        (+ optional batch[f.name + "_mask"]). Returns (B, Σ dims) concat."""
+        outs = []
+        for f in self.fields:
+            ids = batch[f.name]
+            table = params["tables"][f.name]
+            if f.n_hot == 1 and ids.ndim == 1:
+                outs.append(jnp.take(table, ids, axis=0))
+            else:
+                mask = batch.get(f.name + "_mask")
+                outs.append(multihot_lookup(table, ids, mask, f.mode))
+        return jnp.concatenate(outs, axis=-1)
+
+    @property
+    def total_dim(self) -> int:
+        return sum(f.dim for f in self.fields)
+
+    def partition_specs(self, model_axis: str = "model"):
+        """Row-sharded spec per table (vocab dim over the model axis)."""
+        from jax.sharding import PartitionSpec as P
+
+        return {"tables": {f.name: P(model_axis, None) for f in self.fields}}

@@ -1,0 +1,41 @@
+"""Jitted public wrappers for the fused SDIM kernels.
+
+``sdim_attention`` is the end-to-end drop-in for
+``repro.core.sdim.sdim_attention`` routed through the Pallas encode + query
+kernels (CPU: interpret mode; TPU: compiled)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sdim_bucket.sdim_bucket import bse_encode
+from repro.kernels.sdim_query.sdim_query import sdim_query
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@partial(jax.jit, static_argnames=("tau", "interpret"))
+def encode(seq, mask, R, tau: int, interpret: bool | None = None):
+    interp = _on_cpu() if interpret is None else interpret
+    return bse_encode(seq, mask, R, tau, interpret=interp)
+
+
+@partial(jax.jit, static_argnames=("tau", "interpret"))
+def query(q, table, R, tau: int, interpret: bool | None = None):
+    interp = _on_cpu() if interpret is None else interpret
+    return sdim_query(q, table, R, tau, interpret=interp)
+
+
+def sdim_attention(q, seq, mask, R, tau: int, interpret: bool | None = None):
+    """Fused-kernel SDIM attention. q: (B, d) or (B, C, d); seq: (B, L, d)."""
+    if mask is None:
+        mask = jnp.ones(seq.shape[:2], seq.dtype)
+    single = q.ndim == 2
+    qc = q[:, None, :] if single else q
+    table = encode(seq, mask, R, tau, interpret)
+    out = query(qc, table, R, tau, interpret).astype(seq.dtype)
+    return out[:, 0] if single else out

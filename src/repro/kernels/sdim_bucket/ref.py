@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the fused BSE-encode kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sdim, simhash
+
+
+def bse_encode_ref(seq: jax.Array, mask: jax.Array, R: jax.Array, tau: int) -> jax.Array:
+    """(B, L, d), (B, L), (m, d) -> bucket table (B, G, U, d) fp32."""
+    sig = simhash.signatures(seq, R, tau)
+    return sdim.bucket_table(seq, sig, mask, 1 << tau)

@@ -1,0 +1,83 @@
+"""Fused BSE-encode Pallas kernel: SimHash + signature pack + bucket scatter.
+
+One VMEM pass over the behavior sequence per (batch, L-tile) grid step:
+
+    S_tile (TL, d) --GEMM--> proj (TL, m) --sign/pack--> sig (TL, G)
+          --one-hot--> (TL, G·U) --GEMMᵀ--> += table (G·U, d)
+
+The ``L×m`` code matrix never hits HBM (ETA materializes it; SDIM doesn't
+need to). The bucket "scatter" is expressed as a one-hot matmul so both GEMMs
+land on the MXU; with paper dims (G·U = 16·8 = 128) the one-hot operand is
+exactly one 128-lane tile.
+
+TPU target: fp32 accumulation in the output block, which is revisited across
+the L-grid (sequential innermost dimension). Validated on CPU via
+``interpret=True`` against ``ref.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _encode_kernel(seq_ref, mask_ref, r_ref, table_ref, *, tau: int, groups: int):
+    li = pl.program_id(1)
+
+    @pl.when(li == 0)
+    def _init():
+        table_ref[...] = jnp.zeros_like(table_ref)
+
+    s = seq_ref[0].astype(jnp.float32)                       # (TL, d)
+    r = r_ref[...].astype(jnp.float32)                       # (m, d)
+    proj = jax.lax.dot_general(
+        s, r, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                        # (TL, m)
+    bits = (proj >= 0.0).astype(jnp.int32)
+    TL = bits.shape[0]
+    grouped = bits.reshape(TL, groups, tau)
+    weights = (1 << jax.lax.broadcasted_iota(jnp.int32, (1, 1, tau), 2))
+    sig = jnp.sum(grouped * weights, axis=-1)                # (TL, G)
+    U = 1 << tau
+    u_iota = jax.lax.broadcasted_iota(jnp.int32, (TL, groups, U), 2)
+    onehot = (sig[:, :, None] == u_iota).astype(jnp.float32)  # (TL, G, U)
+    onehot = onehot * mask_ref[0][:, None, None].astype(jnp.float32)
+    onehot2d = onehot.reshape(TL, groups * U)
+    contrib = jax.lax.dot_general(
+        onehot2d, s, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                        # (G·U, d)
+    table_ref[0] += contrib
+
+
+def bse_encode(
+    seq: jax.Array,        # (B, L, d)
+    mask: jax.Array,       # (B, L) 1 = valid
+    R: jax.Array,          # (m, d)
+    tau: int,
+    *,
+    block_l: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns bucket table (B, G, U, d) fp32."""
+    B, L, d = seq.shape
+    m = R.shape[0]
+    assert m % tau == 0
+    G, U = m // tau, 1 << tau
+    block_l = min(block_l, L)
+    assert L % block_l == 0, (L, block_l)
+
+    out = pl.pallas_call(
+        functools.partial(_encode_kernel, tau=tau, groups=G),
+        grid=(B, L // block_l),
+        in_specs=[
+            pl.BlockSpec((1, block_l, d), lambda b, l: (b, l, 0)),
+            pl.BlockSpec((1, block_l), lambda b, l: (b, l)),
+            pl.BlockSpec((m, d), lambda b, l: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G * U, d), lambda b, l: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, G * U, d), jnp.float32),
+        interpret=interpret,
+    )(seq, mask.astype(seq.dtype), R)
+    return out.reshape(B, G, U, d)

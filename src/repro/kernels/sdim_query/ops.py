@@ -1,0 +1,13 @@
+"""Jitted wrapper — see repro.kernels.sdim_bucket.ops for the fused pipeline."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.sdim_query.sdim_query import sdim_query
+
+
+@partial(jax.jit, static_argnames=("tau", "interpret"))
+def query(q, table, R, tau: int, interpret: bool = False):
+    return sdim_query(q, table, R, tau, interpret=interpret)

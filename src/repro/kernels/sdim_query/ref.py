@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the fused SDIM-query kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.core import sdim, simhash
+
+
+def sdim_query_ref(q: jax.Array, table: jax.Array, R: jax.Array, tau: int) -> jax.Array:
+    """(B, C, d), (B, G, U, d) -> (B, C, d): gather own bucket per group,
+    ℓ2-normalize, mean over groups."""
+    sig_q = simhash.signatures(q, R, tau)
+    per_group = sdim.gather_buckets(table, sig_q)
+    return sdim.combine_groups(per_group)

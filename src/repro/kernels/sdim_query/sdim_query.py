@@ -1,0 +1,83 @@
+"""Fused SDIM-query Pallas kernel: candidate hash + bucket read + ℓ2-combine.
+
+Per (batch, C-tile) grid step:
+
+    table (G·U, d) --row ℓ2-normalize--> Tn           (scratch, once per batch)
+    Q_tile (TC, d) --GEMM--> proj (TC, m) --pack--> sig (TC, G)
+          --one-hot--> (TC, G·U) --GEMM--> Σ_g ℓ2(bucket_g)  --/G--> out
+
+Key trick: because each query's one-hot row has exactly one 1 per group, the
+single (TC, G·U)×(G·U, d) GEMM *simultaneously* gathers every group's bucket
+and sums over groups — the paper's gather + mean collapses into one MXU
+matmul against the pre-normalized table.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _query_kernel(q_ref, table_ref, r_ref, out_ref, tnorm_ref, *, tau: int, groups: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _normalize_table():
+        t = table_ref[0].astype(jnp.float32)                 # (G·U, d)
+        norm = jnp.sqrt(jnp.sum(t * t, axis=-1, keepdims=True) + 1e-12)
+        tnorm_ref[...] = t / norm
+
+    q = q_ref[0].astype(jnp.float32)                         # (TC, d)
+    r = r_ref[...].astype(jnp.float32)                       # (m, d)
+    proj = jax.lax.dot_general(
+        q, r, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    bits = (proj >= 0.0).astype(jnp.int32)
+    TC = bits.shape[0]
+    grouped = bits.reshape(TC, groups, tau)
+    weights = (1 << jax.lax.broadcasted_iota(jnp.int32, (1, 1, tau), 2))
+    sig = jnp.sum(grouped * weights, axis=-1)                # (TC, G)
+    U = 1 << tau
+    u_iota = jax.lax.broadcasted_iota(jnp.int32, (TC, groups, U), 2)
+    onehot = (sig[:, :, None] == u_iota).astype(jnp.float32).reshape(TC, groups * U)
+    gathered = jax.lax.dot_general(
+        onehot, tnorm_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                        # (TC, d) = Σ_g ℓ2(bucket)
+    out_ref[0] = gathered / groups
+
+
+def sdim_query(
+    q: jax.Array,          # (B, C, d) candidates
+    table: jax.Array,      # (B, G, U, d) bucket table (BSE output)
+    R: jax.Array,          # (m, d)
+    tau: int,
+    *,
+    block_c: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns user-interest vectors (B, C, d) fp32."""
+    B, C, d = q.shape
+    _, G, U, _ = table.shape
+    m = R.shape[0]
+    assert G == m // tau and U == 1 << tau
+    block_c = min(block_c, C)
+    assert C % block_c == 0, (C, block_c)
+    table2d = table.reshape(B, G * U, d)
+
+    return pl.pallas_call(
+        functools.partial(_query_kernel, tau=tau, groups=G),
+        grid=(B, C // block_c),
+        in_specs=[
+            pl.BlockSpec((1, block_c, d), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, G * U, d), lambda b, c: (b, 0, 0)),
+            pl.BlockSpec((m, d), lambda b, c: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c, d), lambda b, c: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, C, d), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((G * U, d), jnp.float32)],
+        interpret=interpret,
+    )(q, table2d, R)

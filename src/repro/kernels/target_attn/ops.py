@@ -1,0 +1,18 @@
+"""Jitted wrapper for the flash target-attention kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.target_attn.target_attn import target_attention_flash
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def target_attention(q, seq, mask, interpret: bool | None = None):
+    interp = _on_cpu() if interpret is None else interpret
+    return target_attention_flash(q, seq, mask, interpret=interp)

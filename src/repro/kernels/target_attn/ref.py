@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the flash target-attention kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.core.target_attention import target_attention
+
+
+def target_attention_ref(q: jax.Array, seq: jax.Array, mask: jax.Array) -> jax.Array:
+    """(B, C, d), (B, L, d), (B, L) -> (B, C, d)."""
+    return target_attention(q, seq, mask)

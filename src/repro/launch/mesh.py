@@ -1,0 +1,27 @@
+"""Production mesh builders (a FUNCTION, not a module-level constant, so
+importing never touches jax device state).
+
+Single pod: (data=16, model=16) = 256 chips (TPU v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the pod axis folds into
+DP (default) or hosts pipeline stages (experimental PP).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def data_axes(mesh) -> tuple:
+    """DP axes for this mesh (pod folds into DP)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def all_axes(mesh) -> tuple:
+    return tuple(mesh.axis_names)

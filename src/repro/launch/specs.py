@@ -1,0 +1,426 @@
+"""Per-cell abstract input specs + step functions for the multi-pod dry-run.
+
+``build_cell(arch, shape, mesh)`` returns the jittable step and a pytree of
+``ShapeDtypeStruct`` stand-ins with ``NamedSharding`` attached (the
+shannon/kernels pattern: weak-type-correct, shardable, no allocation).
+
+Sharding layout decisions (see DESIGN.md §4):
+  * LM train/prefill — params FSDP(zero1)×TP f32; tokens over DP axes.
+  * LM decode        — params bf16 FSDP×TP (weight-sharded decode), KV cache
+    sequence-sharded; decode_32k: batch→data, seq→model; long_500k: B=1,
+    seq→(all axes) with split-KV combine.
+  * recsys           — tables row-sharded over model, batch over DP.
+  * gnn              — params replicated, edges sharded over ALL axes.
+
+Variants: ``baseline`` (paper-faithful) plus named §Perf variants
+(``sdim_kv`` long-decode compression, etc.).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import registry
+from repro.distributed import sharding as shd
+from repro.distributed.mesh_ctx import MeshCtx
+from repro.launch.mesh import all_axes, data_axes
+from repro.train.optimizer import OptimizerConfig, apply_updates, init_opt_state
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str
+    step_fn: Callable
+    abstract_args: tuple
+    donate: tuple = ()
+    variant: str = "baseline"
+    note: str = ""
+
+    @property
+    def name(self) -> str:
+        v = "" if self.variant == "baseline" else f"+{self.variant}"
+        return f"{self.arch}/{self.shape}{v}"
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+def _abstract_tree(init_fn, family, mesh, dp, *, fsdp: bool, dtype=None):
+    """eval_shape the init and attach per-param shardings."""
+    tree = jax.eval_shape(init_fn)
+
+    def place(path, leaf):
+        key = jax.tree_util.keystr(path)
+        spec = shd.param_spec(family, key, leaf.shape)
+        if fsdp:
+            spec = shd.zero1_spec(spec, leaf.shape, mesh, dp)
+        else:
+            spec = shd.valid_for_mesh(spec, leaf.shape, mesh)
+        dt = dtype if (dtype is not None and jnp.issubdtype(leaf.dtype, jnp.floating)) else leaf.dtype
+        return _sds(leaf.shape, dt, mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(place, tree)
+
+
+def _abstract_state(model_init, family, mesh, dp, opt_cfg, param_dtype=None):
+    """{'params', 'opt'} abstract state with ZeRO-1 opt shardings."""
+    params = _abstract_tree(model_init, family, mesh, dp, fsdp=family == "lm",
+                            dtype=param_dtype)
+    opt = jax.eval_shape(lambda p: init_opt_state(p, opt_cfg), params)
+
+    def place(path, leaf):
+        key = jax.tree_util.keystr(path)
+        if leaf.ndim == 0:
+            return _sds(leaf.shape, leaf.dtype, mesh, P())
+        base = shd.param_spec(family, key, leaf.shape)
+        spec = shd.zero1_spec(base, leaf.shape, mesh, dp)
+        return _sds(leaf.shape, leaf.dtype, mesh, spec)
+
+    opt = jax.tree_util.tree_map_with_path(place, opt)
+    return {"params": params, "opt": opt}
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+def _lm_cell(arch, shape_name, shape, mesh, variant, unroll=False,
+             depth_override=None):
+    from repro.models.lm import LMModel
+
+    cfg = registry.get(arch).FULL
+    # §Perf train variants (EXPERIMENTS.md iteration log):
+    #   baseline — f32 params+compute (Megatron TP×FSDP×SP recipe)
+    #   amp      — bf16 compute off a plain param cast (iteration 2)
+    #   opt      — amp + cast-THEN-gather constraint + microbatch-4 grad
+    #              accumulation + slab-free CE (iterations 5-7)
+    flags = {
+        "baseline": dict(amp=False, micro=1),
+        "amp": dict(amp=True, micro=1),
+        "opt": dict(amp=True, micro=4, cast_constrain=True),
+        # iteration C: params STORED bf16, f32 master in the optimizer —
+        # every gather/reduce moves bf16 by construction
+        "bf16params": dict(amp=False, micro=1, bf16_params=True),
+        # iteration 9: manual Megatron-TP FFN (explicit bf16 AG + psum_scatter)
+        "manual_tp": dict(amp=False, micro=1, manual_tp=True),
+    }.get(variant if shape["kind"] == "train" else "baseline",
+          dict(amp=False, micro=1))
+    if flags["amp"]:
+        cfg = dataclasses.replace(cfg, compute_dtype="bfloat16")
+    if unroll:
+        cfg = dataclasses.replace(cfg, scan_unroll=True)
+    if depth_override is not None:
+        # reduced-depth unrolled build for cost extrapolation: keeps
+        # first_k_dense + embeddings, scans exactly ``depth_override`` layers
+        cfg = dataclasses.replace(cfg, n_layers=depth_override + cfg.first_k_dense)
+    model = LMModel(cfg)
+    dp = data_axes(mesh)
+    ctx = MeshCtx(mesh, data_axes=dp, act_seq_shard=True,
+                  manual_tp=flags.get("manual_tp", False))
+    B, S = shape["global_batch"], shape["seq"]
+    opt_cfg = OptimizerConfig(kind="adamw", lr=3e-4, weight_decay=0.1,
+                              schedule="warmup_cosine",
+                              master_weights=flags.get("bf16_params", False))
+    init_fn = partial(model.init, jax.random.PRNGKey(0))
+
+    if shape["kind"] == "train":
+        state = _abstract_state(
+            init_fn, "lm", mesh, dp, opt_cfg,
+            param_dtype=jnp.bfloat16 if flags.get("bf16_params") else None)
+        batch = {
+            "tokens": _sds((B, S), jnp.int32, mesh, P(dp, None)),
+            "targets": _sds((B, S), jnp.int32, mesh, P(dp, None)),
+        }
+        micro = flags["micro"]
+
+        def step(state, batch):
+            params = state["params"]
+            if flags.get("cast_constrain"):
+                # cast the f32 master to bf16 AND pin the copy to the same
+                # FSDP×TP sharding so every downstream all-gather moves bf16
+                # (otherwise XLA gathers f32 then casts: no wire savings)
+                def c(path, x):
+                    if not jnp.issubdtype(x.dtype, jnp.floating):
+                        return x
+                    spec = shd.zero1_spec(
+                        shd.param_spec("lm", jax.tree_util.keystr(path), x.shape),
+                        x.shape, mesh, dp)
+                    return jax.lax.with_sharding_constraint(
+                        x.astype(jnp.bfloat16), NamedSharding(mesh, spec))
+
+                fwd_params = jax.tree_util.tree_map_with_path(c, params)
+            else:
+                fwd_params = params
+
+            def loss_fn(p, toks, tgts):
+                return model.loss(p, toks, tgts, mesh=ctx)
+
+            if micro == 1:
+                loss, grads = jax.value_and_grad(loss_fn)(
+                    fwd_params, batch["tokens"], batch["targets"])
+            else:
+                # in-step grad accumulation: activations & logits slabs /micro
+                tks = batch["tokens"].reshape(micro, B // micro, S)
+                tgs = batch["targets"].reshape(micro, B // micro, S)
+                loss = jnp.float32(0.0)
+                grads = jax.tree_util.tree_map(
+                    lambda x: jnp.zeros(x.shape, jnp.float32), params)
+                for i in range(micro):  # python loop: accurate cost counts
+                    l_i, g_i = jax.value_and_grad(loss_fn)(
+                        fwd_params, tks[i], tgs[i])
+                    loss = loss + l_i / micro
+                    grads = jax.tree_util.tree_map(
+                        lambda a, g: a + g.astype(jnp.float32) / micro, grads, g_i)
+
+            new_p, new_o, _ = apply_updates(params, grads, state["opt"], opt_cfg)
+            return {"params": new_p, "opt": new_o}, loss
+
+        return Cell(arch, shape_name, "train", step, (state, batch), donate=(0,),
+                    variant=variant)
+
+    if shape["kind"] == "prefill":
+        params = _abstract_tree(init_fn, "lm", mesh, dp, fsdp=True, dtype=jnp.bfloat16)
+        tokens = _sds((B, S), jnp.int32, mesh, P(dp, None))
+
+        def step(params, tokens):
+            return model.prefill(params, tokens, mesh=ctx)
+
+        return Cell(arch, shape_name, "prefill", step, (params, tokens), variant=variant)
+
+    # decode kinds
+    params = _abstract_tree(init_fn, "lm", mesh, dp, fsdp=True, dtype=jnp.bfloat16)
+    long_ctx = B < math.prod(mesh.shape[a] for a in dp)
+    if variant == "sdim_kv":
+        # paper technique: bucket-compressed KV, O(1) in S
+        cache = jax.eval_shape(partial(model.init_sdim_cache, B))
+
+        def sdim_spec(l):
+            if l.ndim == 0:
+                return P()
+            return P(None, dp if not long_ctx else None)
+
+        cache = jax.tree_util.tree_map(
+            lambda l: _sds(l.shape, l.dtype, mesh, sdim_spec(l)), cache)
+        token = _sds((B, 1), jnp.int32, mesh, P(dp if not long_ctx else None, None))
+
+        def step(params, token, cache):
+            return model.sdim_decode_step(params, token, cache,
+                                          mesh=MeshCtx(mesh, data_axes=None))
+
+        return Cell(arch, shape_name, "decode", step, (params, token, cache),
+                    donate=(2,), variant=variant,
+                    note="SDIM bucket-compressed KV (paper technique)")
+
+    if long_ctx:
+        seq_ax, batch_ax = all_axes(mesh), None
+    else:
+        seq_ax, batch_ax = ("model",), dp
+    dctx = MeshCtx(mesh, data_axes=batch_ax, seq_axes=seq_ax)
+    cache = jax.eval_shape(partial(model.init_cache, B, S, jnp.bfloat16))
+
+    def cache_spec(leaf):
+        # leaves: (L, B, S, H, hd) (gqa) / (L, B, S, r) (mla); dense blocks
+        # drop the leading L. S sits at a fixed index with B right before it.
+        dims = [None] * leaf.ndim
+        si = list(leaf.shape).index(S)
+        dims[si] = seq_ax
+        if batch_ax is not None and si >= 1 and leaf.shape[si - 1] == B and \
+                B % math.prod(mesh.shape[a] for a in batch_ax) == 0:
+            dims[si - 1] = batch_ax
+        return P(*dims)
+
+    cache = jax.tree_util.tree_map(
+        lambda l: _sds(l.shape, l.dtype, mesh, cache_spec(l)), cache)
+    token = _sds((B, 1), jnp.int32, mesh, P(batch_ax, None))
+    cache_len = _sds((), jnp.int32, mesh, P())
+
+    def step(params, token, cache, cache_len):
+        return model.sp_decode_step(params, token, cache, cache_len, dctx)
+
+    return Cell(arch, shape_name, "decode", step, (params, token, cache, cache_len),
+                variant=variant,
+                note=f"split-KV decode, seq over {seq_ax}, batch over {batch_ax}")
+
+
+# ---------------------------------------------------------------------------
+# recsys cells
+# ---------------------------------------------------------------------------
+def _recsys_batch_specs(cfg, B, mesh, dp, arch):
+    specs = {
+        "hist_items": _sds((B, cfg.long_len), jnp.int32, mesh, P(dp, None)),
+        "hist_cats": _sds((B, cfg.long_len), jnp.int32, mesh, P(dp, None)),
+        "hist_mask": _sds((B, cfg.long_len), jnp.float32, mesh, P(dp, None)),
+        "cand_item": _sds((B,), jnp.int32, mesh, P(dp)),
+        "cand_cat": _sds((B,), jnp.int32, mesh, P(dp)),
+        "ctx": _sds((B, cfg.ctx_dim), jnp.float32, mesh, P(dp, None)),
+        "label": _sds((B,), jnp.float32, mesh, P(dp)),
+    }
+    if cfg.arch == "wide_deep":
+        specs["sparse_ids"] = _sds((B, cfg.n_sparse), jnp.int32, mesh, P(dp, None))
+    return specs
+
+
+def _recsys_cell(arch, shape_name, shape, mesh, variant, unroll=False):
+    from repro.models.ctr import CTRModel
+
+    cfg = registry.get(arch).FULL
+    if unroll:
+        cfg = dataclasses.replace(cfg, unroll_scans=True)
+    emb_dtype = jnp.bfloat16 if variant == "bf16emb" else None
+    if variant == "target_attention":
+        import dataclasses as dc
+
+        cfg = dc.replace(cfg, interest=dc.replace(cfg.interest, kind="target"))
+    model = CTRModel(cfg)
+    dp = data_axes(mesh)
+    opt_cfg = OptimizerConfig(kind="adagrad", lr=0.01, clip_norm=None)
+    init_fn = partial(model.init, jax.random.PRNGKey(0))
+    B = shape["global_batch"]
+
+    if shape["kind"] == "train":
+        state = _abstract_state(init_fn, "recsys", mesh, dp, opt_cfg,
+                                param_dtype=emb_dtype)
+        batch = _recsys_batch_specs(cfg, B, mesh, dp, arch)
+
+        def step(state, batch):
+            (loss, _), grads = jax.value_and_grad(
+                lambda p, b: model.loss(p, b), has_aux=True)(state["params"], batch)
+            new_p, new_o, _ = apply_updates(state["params"], grads, state["opt"], opt_cfg)
+            return {"params": new_p, "opt": new_o}, loss
+
+        return Cell(arch, shape_name, "train", step, (state, batch), donate=(0,),
+                    variant=variant)
+
+    params = _abstract_tree(init_fn, "recsys", mesh, dp, fsdp=False)
+    # serving has no embedding-gradient scatter: shard the batch over EVERY
+    # mesh axis (262k/256 = 1k per chip instead of 16k)
+    serve_dp = all_axes(mesh)
+
+    if shape["kind"] == "serve":
+        batch = _recsys_batch_specs(cfg, B, mesh, serve_dp, arch)
+        batch.pop("label")
+
+        def step(params, batch):
+            return model.apply(params, batch)
+
+        return Cell(arch, shape_name, "serve", step, (params, batch), variant=variant)
+
+    # retrieval_cand: one user's state vs 1e6 candidates
+    dp = serve_dp
+    n_dev = math.prod(mesh.shape[a] for a in dp)
+    C = ((shape["n_candidates"] + n_dev - 1) // n_dev) * n_dev  # pad to devices
+    user = {
+        "hist_items": _sds((1, cfg.long_len), jnp.int32, mesh, P(None, None)),
+        "hist_cats": _sds((1, cfg.long_len), jnp.int32, mesh, P(None, None)),
+        "hist_mask": _sds((1, cfg.long_len), jnp.float32, mesh, P(None, None)),
+    }
+    ci = _sds((C,), jnp.int32, mesh, P(dp))
+    cc = _sds((C,), jnp.int32, mesh, P(dp))
+    cx = _sds((C, cfg.ctx_dim), jnp.float32, mesh, P(dp, None))
+    args = [params, user, ci, cc, cx]
+    if cfg.arch == "wide_deep":
+        args.append(_sds((C, cfg.n_sparse), jnp.int32, mesh, P(dp, None)))
+
+        def step(params, user, ci, cc, cx, sp):
+            return model.score_candidates(params, user, ci, cc, cx, sparse_ids=sp)
+    else:
+
+        def step(params, user, ci, cc, cx):
+            return model.score_candidates(params, user, ci, cc, cx)
+
+    return Cell(arch, shape_name, "retrieval", step, tuple(args), variant=variant)
+
+
+# ---------------------------------------------------------------------------
+# gnn cells
+# ---------------------------------------------------------------------------
+def _gnn_cell(arch, shape_name, shape, mesh, variant, unroll=False):
+    from repro.models.gnn import GatedGCN
+
+    base = registry.get(arch).FULL
+    cfg = registry.gnn_config_for_shape(base, shape)
+    if unroll:
+        cfg = dataclasses.replace(cfg, unroll=True)
+    model = GatedGCN(cfg)
+    axes = all_axes(mesh)
+    n_dev = math.prod(mesh.shape[a] for a in axes)
+    dp = data_axes(mesh)
+    opt_cfg = OptimizerConfig(kind="adamw", lr=1e-3)
+    init_fn = partial(model.init, jax.random.PRNGKey(0))
+
+    if shape["kind"] == "sampled":
+        n_nodes, n_edges = registry.sampled_subgraph_sizes(shape)
+    elif shape["kind"] == "graph_batch":
+        n_nodes = shape["n_nodes"] * shape["batch"]
+        n_edges = shape["n_edges"] * shape["batch"]
+    else:
+        n_nodes, n_edges = shape["n_nodes"], shape["n_edges"]
+    n_edges_pad = ((n_edges + n_dev - 1) // n_dev) * n_dev
+
+    graph = {
+        "x": _sds((n_nodes, cfg.d_feat), jnp.float32, mesh, P(None, None)),
+        "edge_index": _sds((2, n_edges_pad), jnp.int32, mesh, P(None, axes)),
+        "edge_mask": _sds((n_edges_pad,), jnp.float32, mesh, P(axes)),
+    }
+    if shape["kind"] == "graph_batch":
+        graph["edge_attr"] = _sds((n_edges_pad, cfg.d_edge), jnp.float32, mesh, P(axes, None))
+        graph["graph_ids"] = _sds((n_nodes,), jnp.int32, mesh, P(None))
+        graph["y"] = _sds((shape["batch"], 1), jnp.float32, mesh, P(None, None))
+        n_graphs = shape["batch"]
+    else:
+        graph["y"] = _sds((n_nodes,), jnp.int32, mesh, P(None))
+        graph["node_mask"] = _sds((n_nodes,), jnp.float32, mesh, P(None))
+        n_graphs = None
+
+    state = _abstract_state(init_fn, "gnn", mesh, dp, opt_cfg)
+
+    def step(state, graph):
+        if n_graphs is not None:
+            graph = dict(graph, n_graphs=n_graphs)
+        loss, grads = jax.value_and_grad(
+            lambda p, g: model.loss(p, g, mesh=mesh, axes=axes))(state["params"], graph)
+        new_p, new_o, _ = apply_updates(state["params"], grads, state["opt"], opt_cfg)
+        return {"params": new_p, "opt": new_o}, loss
+
+    return Cell(arch, shape_name, "train", step, (state, graph), donate=(0,),
+                variant=variant)
+
+
+# ---------------------------------------------------------------------------
+def build_cell(arch: str, shape_name: str, mesh, variant: str = "baseline",
+               unroll: bool = False, depth_override: int | None = None) -> Cell:
+    """``unroll=True`` lowers scans as flat loops: identical math, accurate
+    XLA cost_analysis (while-loop bodies are otherwise counted once).
+    ``depth_override`` (LM only) builds a reduced-depth unrolled model so the
+    dry-run can extrapolate exactly-linear per-layer costs instead of
+    compiling 60-layer flat HLO."""
+    fam = registry.family(arch)
+    shape = registry.shapes_for(arch)[shape_name]
+    if fam == "lm":
+        return _lm_cell(arch, shape_name, shape, mesh, variant, unroll,
+                        depth_override)
+    if fam == "recsys":
+        return _recsys_cell(arch, shape_name, shape, mesh, variant, unroll)
+    if fam == "gnn":
+        return _gnn_cell(arch, shape_name, shape, mesh, variant, unroll)
+    raise ValueError(fam)
+
+
+def has_scans(arch: str, shape_name: str) -> bool:
+    """Whether the lowered program contains trip-counted loops that would
+    skew cost_analysis (LM stacks, GNN stacks, DIEN recurrences)."""
+    fam = registry.family(arch)
+    return fam in ("lm", "gnn") or arch == "dien"
+
+
+def lm_scan_depth(arch: str) -> int:
+    """Number of scanned layers in the full config (extrapolation target)."""
+    return registry.get(arch).FULL.n_scan_layers

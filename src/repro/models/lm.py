@@ -1,0 +1,432 @@
+"""LM family: granite-3-2b, command-r-plus-104b, qwen3-8b, deepseek-v2-236b,
+deepseek-moe-16b — one parameterized decoder-only transformer.
+
+Steps exposed (what the dry-run lowers per shape):
+  * ``train_step``      — next-token CE loss fwd+bwd (train_4k)
+  * ``prefill_step``    — full-sequence forward producing the KV cache +
+                          last-position logits (prefill_32k)
+  * ``decode_step``     — one new token against a seq_len KV cache
+                          (decode_32k, long_500k exact path)
+  * ``sdim_decode_step``— one new token against SDIM bucket-compressed KV
+                          (long_500k paper-technique path): the BSE idea
+                          applied to LM serving — O(G·U·d) state per head
+                          instead of O(S·d), query cost independent of S.
+
+SDIM-KV notes (DESIGN.md §Arch-applicability): for GQA the buckets live per
+kv-head over the real keys; for MLA they live over the 512-dim latent c_kv
+(queries hash their absorbed latent form), dropping the decoupled-RoPE score
+term — a positional approximation, recorded as such.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sdim, simhash
+from repro.nn.attention import GQAttention, MLAttention, rope_frequencies, apply_rope
+from repro.nn.layers import Embedding, RMSNorm, LayerNorm, Linear
+from repro.nn.module import KeyGen
+from repro.nn.transformer import Block, BlockConfig, Stack
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    attention: str = "gqa"              # "gqa" | "mla"
+    qk_norm: bool = False
+    use_bias: bool = False
+    norm: str = "rmsnorm"
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    # MoE
+    moe: Optional[dict] = None          # {"n_experts","top_k","n_shared","d_ff"}
+    first_k_dense: int = 0              # leading dense layers before MoE stack
+    # MLA
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 1536
+    nope_head_dim: int = 128
+    rope_head_dim: int = 64
+    v_head_dim: int = 128
+    # training
+    remat: str = "full"
+    compute_dtype: str = "float32"   # "bfloat16" = AMP: bf16 fwd/bwd, f32 master
+    scan_unroll: bool = False   # unrolled lowering (accurate roofline counts)
+    # SDIM-KV compression (long-context decode)
+    sdim_m: int = 48
+    sdim_tau: int = 3
+
+    def block_cfg(self, moe: bool) -> BlockConfig:
+        return BlockConfig(
+            d_model=self.d_model, n_heads=self.n_heads, n_kv_heads=self.n_kv_heads,
+            head_dim=self.head_dim, d_ff=self.d_ff, attention=self.attention,
+            norm=self.norm, qk_norm=self.qk_norm, use_bias=self.use_bias,
+            rope_theta=self.rope_theta, kv_lora_rank=self.kv_lora_rank,
+            q_lora_rank=self.q_lora_rank, nope_head_dim=self.nope_head_dim,
+            rope_head_dim=self.rope_head_dim, v_head_dim=self.v_head_dim,
+            moe=self.moe if moe else None,
+            q_chunk_unroll=self.scan_unroll,
+        )
+
+    @property
+    def n_scan_layers(self) -> int:
+        return self.n_layers - self.first_k_dense
+
+
+class LMModel:
+    def __init__(self, cfg: LMConfig):
+        self.cfg = cfg
+        self.dense_block = Block(cfg.block_cfg(moe=False))
+        self.stack = Stack(cfg.block_cfg(moe=cfg.moe is not None),
+                           cfg.n_scan_layers, remat=cfg.remat,
+                           unroll=cfg.scan_unroll)
+
+    # ---------------- init ----------------
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        kg = KeyGen(key)
+        p: dict[str, Params] = {
+            "embed": Embedding(cfg.vocab, cfg.d_model).init(kg()),
+            "stack": self.stack.init(kg()),
+            "final_norm": self._norm().init(kg()),
+        }
+        if cfg.first_k_dense:
+            kd = KeyGen(kg())
+            p["dense_blocks"] = [self.dense_block.init(kd())
+                                 for _ in range(cfg.first_k_dense)]
+        if not cfg.tie_embeddings:
+            p["lm_head"] = {"w": 0.02 * jax.random.normal(kg(), (cfg.d_model, cfg.vocab))}
+        return p
+
+    def _norm(self):
+        return RMSNorm(self.cfg.d_model) if self.cfg.norm == "rmsnorm" else LayerNorm(self.cfg.d_model)
+
+    def _logits(self, params, x):
+        if self.cfg.tie_embeddings:
+            return Embedding(self.cfg.vocab, self.cfg.d_model).attend(params["embed"], x)
+        return jnp.einsum("btd,dv->btv", x, params["lm_head"]["w"])
+
+    # ---------------- forward / loss ----------------
+    def forward(self, params, tokens, mesh=None):
+        """tokens (B, T) -> (hidden (B, T, d), aux_loss)."""
+        x = Embedding(self.cfg.vocab, self.cfg.d_model).apply(params["embed"], tokens)
+        aux = jnp.float32(0.0)
+        for i in range(self.cfg.first_k_dense):
+            x, aux_i = self.dense_block.apply(params["dense_blocks"][i], x, mesh=mesh)
+            aux = aux + aux_i
+        x, aux_s = self.stack.apply(params["stack"], x, mesh=mesh)
+        return self._norm().apply(params["final_norm"], x), aux + aux_s
+
+    def _cast_compute(self, params):
+        if self.cfg.compute_dtype == "float32":
+            return params
+        dt = jnp.bfloat16
+        return jax.tree_util.tree_map(
+            lambda x: x.astype(dt)
+            if jnp.issubdtype(x.dtype, jnp.floating) else x, params)
+
+    def loss(self, params, tokens, targets, mesh=None):
+        """Next-token CE (targets = tokens shifted by caller). Returns scalar.
+
+        With ``compute_dtype='bfloat16'`` the whole fwd/bwd runs in bf16 off a
+        one-time cast (grads still accumulate into f32 master params through
+        the cast), halving activation memory AND FSDP all-gather volume."""
+        from repro.distributed.mesh_ctx import MeshCtx
+
+        ctx = mesh if isinstance(mesh, MeshCtx) else None
+        params = self._cast_compute(params)
+        x, aux = self.forward(params, tokens, mesh=mesh)
+        logits = self._logits(params, x)   # compute dtype (bf16 under AMP)
+        if ctx is not None:
+            # vocab-sharded logits: (B over DP, T, V over model) — never
+            # materialize the full (B,T,V) slab on one chip
+            logits = ctx.constrain(logits, ctx.data_axes, None, ctx.model_axis)
+        # slab-free CE: f32 reductions stream over the bf16 logits; the gold
+        # logit is a gather (GSPMD: local masked gather + small psum), not a
+        # (B,T,V) one-hot einsum — saves a full logits-sized f32 temp
+        logz = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+        gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+        ce = jnp.mean(logz - gold.astype(jnp.float32))
+        return ce + aux
+
+    # ---------------- serving: exact KV ----------------
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        caches = {"stack": self.stack.init_cache(batch, max_len, dtype)}
+        if self.cfg.first_k_dense:
+            attn = self.dense_block.cfg.attn_module()
+            caches["dense"] = [attn.init_cache(batch, max_len, dtype)
+                               for _ in range(self.cfg.first_k_dense)]
+        return caches
+
+    def prefill(self, params, tokens, mesh=None):
+        """Full-sequence forward; returns last-position logits.
+
+        (Cache extraction during prefill shares the attention math; for the
+        dry-run cells what matters is lowering the (B, S) forward.)"""
+        x, _ = self.forward(params, tokens, mesh=mesh)
+        return self._logits(params, x[:, -1:, :])
+
+    def decode_step(self, params, token, caches, cache_len, mesh=None):
+        """token (B, 1) -> (logits (B, 1, V), new caches). Exact attention
+        against the full cache."""
+        from repro.distributed.mesh_ctx import MeshCtx
+
+        ctx = MeshCtx.wrap(mesh)
+        mesh = ctx.for_decode() if ctx is not None else None
+        x = Embedding(self.cfg.vocab, self.cfg.d_model).apply(params["embed"], token)
+        new_caches = dict(caches)
+        if self.cfg.first_k_dense:
+            nd = []
+            for i in range(self.cfg.first_k_dense):
+                x, c = self.dense_block.decode_step(
+                    params["dense_blocks"][i], x, caches["dense"][i], cache_len, mesh=mesh
+                )
+                nd.append(c)
+            new_caches["dense"] = nd
+        x, new_caches["stack"] = self.stack.decode_step(
+            params["stack"], x, caches["stack"], cache_len, mesh=mesh
+        )
+        x = self._norm().apply(params["final_norm"], x)
+        return self._logits(params, x), new_caches
+
+    # ---------------- serving: SDIM-compressed KV ----------------
+    def _sdim_R(self):
+        cfg = self.cfg
+        dk = cfg.kv_lora_rank if cfg.attention == "mla" else cfg.head_dim
+        return simhash.make_hashes(jax.random.PRNGKey(1234), cfg.sdim_m, dk)
+
+    def init_sdim_cache(self, batch: int):
+        """Bucket tables per scanned layer: value table + count table."""
+        cfg = self.cfg
+        G, U = cfg.sdim_m // cfg.sdim_tau, 1 << cfg.sdim_tau
+        if cfg.attention == "mla":
+            H, dv = 1, cfg.kv_lora_rank
+        else:
+            H, dv = cfg.n_kv_heads, cfg.head_dim
+        L = cfg.n_scan_layers
+        return {
+            "vt": jnp.zeros((L, batch, H, G, U, dv), jnp.float32),
+            "ct": jnp.zeros((L, batch, H, G, U), jnp.float32),
+            "len": jnp.zeros((), jnp.int32),
+        }
+
+    def sdim_decode_step(self, params, token, sdim_cache, mesh=None):
+        """One-token decode against bucket-compressed KV (paper technique).
+
+        Per layer: hash the new key, fold (k,v) into the bucket tables
+        (incremental BSE update, O(m·d)); hash the query, read buckets,
+        ℓ2-combine. Cost independent of context length S."""
+        from repro.distributed.mesh_ctx import MeshCtx
+
+        ctx = MeshCtx.wrap(mesh)
+        mesh = ctx.for_decode() if ctx is not None else None
+        cfg = self.cfg
+        R = self._sdim_R()
+        x = Embedding(cfg.vocab, cfg.d_model).apply(params["embed"], token)
+        block_cfg = self.stack.cfg
+        attn = block_cfg.attn_module()
+        norm = block_cfg.norm_module()
+        ffn = block_cfg.ffn_module()
+        B = token.shape[0]
+        # keys are hashed POST-RoPE at their true position (matches the exact
+        # cache layout, so offline BSE re-encodes of a cache agree with the
+        # incremental path); the query is likewise roped at its position.
+        positions = jnp.broadcast_to(sdim_cache["len"].astype(jnp.int32), (B, 1))
+
+        def body(x, scanned):
+            lp, vt, ct = scanned
+            h_in = norm.apply(lp["ln1"], x)
+            if cfg.attention == "mla":
+                mla: MLAttention = attn
+                q_nope, _ = mla._q(lp["attn"], h_in, positions)
+                c_new, _ = mla._kv_latent(lp["attn"], h_in, positions)
+                # fold new latent into buckets
+                dvt, dct = sdim.kv_bucket_table(
+                    c_new[:, :, None, :], c_new[:, :, None, :], None, R, cfg.sdim_tau
+                )
+                vt, ct = vt + dvt, ct + dct
+                # absorbed query per head hashes against the latent
+                r = cfg.kv_lora_rank
+                wk_b = lp["attn"]["wk_b"]["w"].reshape(r, cfg.n_heads, cfg.nope_head_dim)
+                q_lat = jnp.einsum("bthd,rhd->bthr", q_nope, wk_b)    # (B,1,H,r)
+                out_lat = sdim.sdim_decode_attention(
+                    q_lat, jnp.broadcast_to(vt, (B, cfg.n_heads, *vt.shape[2:])),
+                    jnp.broadcast_to(ct, (B, cfg.n_heads, *ct.shape[2:])),
+                    R, cfg.sdim_tau,
+                )                                                      # (B,1,H,r)
+                wv_b = lp["attn"]["wv_b"]["w"].reshape(r, cfg.n_heads, cfg.v_head_dim)
+                o = jnp.einsum("bthr,rhd->bthd", out_lat.astype(x.dtype), wv_b)
+                o = o.reshape(B, 1, cfg.n_heads * cfg.v_head_dim)
+                h = Linear(cfg.n_heads * cfg.v_head_dim, cfg.d_model, False).apply(
+                    lp["attn"]["wo"], o
+                )
+            else:
+                gqa: GQAttention = attn
+                q, k_new, v_new = gqa._qkv(lp["attn"], h_in, positions)
+                dvt, dct = sdim.kv_bucket_table(k_new, v_new, None, R, cfg.sdim_tau)
+                vt, ct = vt + dvt, ct + dct
+                # group queries onto their kv head's table
+                Gq = cfg.n_heads // cfg.n_kv_heads
+                vt_full = jnp.repeat(vt, Gq, axis=1)
+                ct_full = jnp.repeat(ct, Gq, axis=1)
+                o = sdim.sdim_decode_attention(q, vt_full, ct_full, R, cfg.sdim_tau)
+                o = o.reshape(B, 1, cfg.n_heads * cfg.head_dim).astype(x.dtype)
+                h = Linear(cfg.n_heads * cfg.head_dim, cfg.d_model, False).apply(
+                    lp["attn"]["wo"], o
+                )
+            x = x + h.astype(x.dtype)
+            ffn_in = norm.apply(lp["ln2"], x)
+            if block_cfg.moe is not None:
+                h2, _ = ffn.apply(lp["ffn"], ffn_in, mesh=mesh)
+            else:
+                h2 = ffn.apply(lp["ffn"], ffn_in)
+            return x + h2.astype(x.dtype), (vt, ct)
+
+        if cfg.scan_unroll:
+            vts, cts = [], []
+            for i in range(cfg.n_scan_layers):
+                lp, vt_i, ct_i = jax.tree_util.tree_map(
+                    lambda p: p[i],
+                    (params["stack"], sdim_cache["vt"], sdim_cache["ct"]))
+                x, (vt_i, ct_i) = body(x, (lp, vt_i, ct_i))
+                vts.append(vt_i)
+                cts.append(ct_i)
+            new_vt, new_ct = jnp.stack(vts), jnp.stack(cts)
+        else:
+            x, (new_vt, new_ct) = jax.lax.scan(
+                body, x, (params["stack"], sdim_cache["vt"], sdim_cache["ct"])
+            )
+        x = self._norm().apply(params["final_norm"], x)
+        new_cache = {"vt": new_vt, "ct": new_ct, "len": sdim_cache["len"] + 1}
+        return self._logits(params, x), new_cache
+
+    def encode_sdim_cache_from_kv(self, caches, mask=None):
+        """Offline BSE pass: compress an existing exact KV cache into bucket
+        tables (what a serving system does when switching a long session to
+        the compressed path)."""
+        cfg = self.cfg
+        R = self._sdim_R()
+        if cfg.attention == "mla":
+            ckv = caches["stack"]["ckv"]                     # (L, B, S, r)
+            def enc(c):
+                return sdim.kv_bucket_table(c[:, :, None, :], c[:, :, None, :],
+                                            mask, R, cfg.sdim_tau)
+            vt, ct = jax.vmap(enc)(ckv)
+        else:
+            k, v = caches["stack"]["k"], caches["stack"]["v"]  # (L, B, S, H, hd)
+            vt, ct = jax.vmap(lambda kk, vv: sdim.kv_bucket_table(kk, vv, mask, R, cfg.sdim_tau))(k, v)
+        return {"vt": vt, "ct": ct}
+
+    # ---------------- serving: split-KV sequence-parallel decode ----------------
+    def sp_decode_step(self, params, token, caches, cache_len, ctx):
+        """Flash-decoding across the mesh: the KV cache stays sharded on its
+        sequence dim (``ctx.seq_axes``); each layer runs a partial softmax per
+        shard + psum combine (nn/attention.py). Returns
+        (logits, per-layer new (k, v) for the serving loop to append) — the
+        cache itself is read-only inside the step, which is how a production
+        decode server appends blocks out-of-band.
+
+        decode_32k: batch over data, seq over model. long_500k (B=1): seq
+        over (data, model) — 2048 cache slots per chip at 524288.
+        """
+        from repro.distributed.mesh_ctx import MeshCtx
+        from repro.nn.attention import (gqa_sp_decode_attention,
+                                        mla_sp_decode_attention)
+
+        assert isinstance(ctx, MeshCtx) and ctx.seq_axes
+        cfg = self.cfg
+        mesh = ctx.mesh
+        batch_axes = ctx.data_axes
+        seq_axes = ctx.seq_axes
+        ffn_ctx = ctx.for_decode()
+        block_cfg = self.stack.cfg
+        attn = block_cfg.attn_module()
+        norm = block_cfg.norm_module()
+        B = token.shape[0]
+        positions = jnp.broadcast_to(
+            jnp.asarray(cache_len, jnp.int32), (B, 1))
+
+        def attn_part(lp, x, cache):
+            h_in = norm.apply(lp["ln1"], x)
+            if cfg.attention == "mla":
+                mla: MLAttention = attn
+                q_nope, q_rope = mla._q(lp["attn"], h_in, positions)
+                c_new, kr_new = mla._kv_latent(lp["attn"], h_in, positions)
+                r = cfg.kv_lora_rank
+                wk_b = lp["attn"]["wk_b"]["w"].reshape(r, cfg.n_heads, cfg.nope_head_dim)
+                q_lat = jnp.einsum("bthd,rhd->bthr", q_nope, wk_b)
+                import math
+
+                scale = 1.0 / math.sqrt(cfg.nope_head_dim + cfg.rope_head_dim)
+                out_lat = mla_sp_decode_attention(
+                    q_lat, q_rope, cache["ckv"], cache["krope"], c_new, kr_new,
+                    cache_len, mesh, seq_axes, batch_axes, score_scale=scale,
+                )                                               # (B,1,H,r)
+                wv_b = lp["attn"]["wv_b"]["w"].reshape(r, cfg.n_heads, cfg.v_head_dim)
+                o = jnp.einsum("bthr,rhd->bthd", out_lat.astype(x.dtype), wv_b)
+                o = o.reshape(B, 1, cfg.n_heads * cfg.v_head_dim)
+                h = Linear(cfg.n_heads * cfg.v_head_dim, cfg.d_model, False).apply(
+                    lp["attn"]["wo"], o)
+                new_kv = {"ckv": c_new, "krope": kr_new}
+            else:
+                gqa: GQAttention = attn
+                q, k_new, v_new = gqa._qkv(lp["attn"], h_in, positions)
+                o = gqa_sp_decode_attention(
+                    q, cache["k"], cache["v"], k_new, v_new, cache_len,
+                    mesh, seq_axes, batch_axes, n_kv_heads=cfg.n_kv_heads,
+                ).astype(x.dtype)
+                h = Linear(cfg.n_heads * cfg.head_dim, cfg.d_model,
+                           cfg.use_bias).apply(lp["attn"]["wo"], o)
+                new_kv = {"k": k_new, "v": v_new}
+            return x + h, new_kv
+
+        x = Embedding(cfg.vocab, cfg.d_model).apply(params["embed"], token)
+
+        dense_new = []
+        if cfg.first_k_dense:
+            dense_ffn = self.dense_block.cfg.ffn_module()
+            for i in range(cfg.first_k_dense):
+                lp = params["dense_blocks"][i]
+                x, nkv = attn_part(lp, x, caches["dense"][i])
+                ffn_in = norm.apply(lp["ln2"], x)
+                x = x + dense_ffn.apply(lp["ffn"], ffn_in)
+                dense_new.append(nkv)
+
+        ffn = block_cfg.ffn_module()
+
+        def body(x, scanned):
+            lp, cache = scanned
+            x, nkv = attn_part(lp, x, cache)
+            ffn_in = norm.apply(lp["ln2"], x)
+            if block_cfg.moe is not None:
+                h2, _ = ffn.apply(lp["ffn"], ffn_in, mesh=ffn_ctx)
+            else:
+                h2 = ffn.apply(lp["ffn"], ffn_in)
+            return x + h2, nkv
+
+        if cfg.scan_unroll:
+            news = []
+            for i in range(cfg.n_scan_layers):
+                sl = jax.tree_util.tree_map(lambda p: p[i],
+                                            (params["stack"], caches["stack"]))
+                x, nkv = body(x, sl)
+                news.append(nkv)
+            stack_new = jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *news)
+        else:
+            x, stack_new = jax.lax.scan(body, x, (params["stack"], caches["stack"]))
+        x = self._norm().apply(params["final_norm"], x)
+        new_kv = {"stack": stack_new}
+        if dense_new:
+            new_kv["dense"] = dense_new
+        return self._logits(params, x), new_kv

@@ -1,0 +1,1 @@
+from repro.nn import attention, layers, module, moe, rnn, transformer  # noqa: F401

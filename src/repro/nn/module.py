@@ -1,0 +1,119 @@
+"""Minimal pure-JAX parameter/module system.
+
+No flax/haiku available in this environment, so the framework defines its own
+lightweight convention:
+
+* a *module* is a plain Python object (usually a frozen dataclass of static
+  hyper-parameters) exposing ``init(key) -> params`` and
+  ``apply(params, *args) -> out``;
+* ``params`` is a nested dict (pytree) of jnp arrays — trivially
+  checkpointable, shardable with ``jax.tree_util`` and ``NamedSharding``.
+
+Helpers here cover RNG splitting, initializers and dtype policy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Any  # nested dict pytree of jnp.ndarray
+PRNGKey = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# RNG plumbing
+# ---------------------------------------------------------------------------
+class KeyGen:
+    """Deterministic stream of PRNG keys: ``kg = KeyGen(key); kg()`` -> new key."""
+
+    def __init__(self, key: PRNGKey):
+        self._key = key
+
+    def __call__(self) -> PRNGKey:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def split(self, n: int) -> jax.Array:
+        self._key, *subs = jax.random.split(self._key, n + 1)
+        return jnp.stack(subs)
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+def lecun_normal(key: PRNGKey, shape, dtype=jnp.float32, in_axis: int = -2):
+    fan_in = shape[in_axis] if len(shape) > 1 else shape[0]
+    std = 1.0 / np.sqrt(fan_in)
+    return (std * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+
+
+def normal_init(std: float = 0.02):
+    def init(key: PRNGKey, shape, dtype=jnp.float32):
+        return (std * jax.random.normal(key, shape)).astype(dtype)
+
+    return init
+
+
+def zeros_init(key: PRNGKey, shape, dtype=jnp.float32):
+    del key
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(key: PRNGKey, shape, dtype=jnp.float32):
+    del key
+    return jnp.ones(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# dtype policy
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    """Mixed-precision policy: params stored in ``param_dtype``, compute in
+    ``compute_dtype``, reductions/norms in f32."""
+
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.float32
+
+    def cast_to_compute(self, tree):
+        return jax.tree_util.tree_map(
+            lambda x: x.astype(self.compute_dtype)
+            if jnp.issubdtype(x.dtype, jnp.floating)
+            else x,
+            tree,
+        )
+
+
+DEFAULT_POLICY = Policy()
+BF16_POLICY = Policy(param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16)
+
+
+# ---------------------------------------------------------------------------
+# Pytree helpers
+# ---------------------------------------------------------------------------
+def tree_size(params: Params) -> int:
+    """Total number of scalar parameters."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(params))
+
+
+def tree_bytes(params: Params) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(params))
+
+
+def flatten_with_paths(params: Params) -> Iterator[tuple[str, jax.Array]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    for path, leaf in flat:
+        yield jax.tree_util.keystr(path), leaf
+
+
+def map_with_paths(fn: Callable[[str, jax.Array], Any], params: Params) -> Params:
+    """tree_map where ``fn`` also receives the joined key path string."""
+
+    def mapper(path, leaf):
+        return fn(jax.tree_util.keystr(path), leaf)
+
+    return jax.tree_util.tree_map_with_path(mapper, params)

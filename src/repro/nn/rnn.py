@@ -1,0 +1,102 @@
+"""GRU / AUGRU recurrences for DIEN (interest extraction + evolution)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.module import KeyGen, lecun_normal, zeros_init
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class GRU:
+    in_dim: int
+    hidden: int
+
+    def init(self, key) -> Params:
+        kg = KeyGen(key)
+        return {
+            "wx": lecun_normal(kg(), (self.in_dim, 3 * self.hidden)),
+            "wh": lecun_normal(kg(), (self.hidden, 3 * self.hidden)),
+            "b": zeros_init(kg(), (3 * self.hidden,)),
+        }
+
+    def _gates(self, params, x_t, h):
+        zx = x_t @ params["wx"] + params["b"]
+        zh = h @ params["wh"]
+        xr, xz, xn = jnp.split(zx, 3, axis=-1)
+        hr, hz, hn = jnp.split(zh, 3, axis=-1)
+        r = jax.nn.sigmoid(xr + hr)
+        z = jax.nn.sigmoid(xz + hz)
+        n = jnp.tanh(xn + r * hn)
+        return z, n
+
+    def step(self, params, h, x_t):
+        z, n = self._gates(params, x_t, h)
+        return (1.0 - z) * n + z * h
+
+    def apply(self, params, x, h0=None, mask=None, unroll=False):
+        """x: (B, T, in_dim) -> (hs (B,T,H), h_T)."""
+        B, T, _ = x.shape
+        h0 = jnp.zeros((B, self.hidden), x.dtype) if h0 is None else h0
+
+        def body(h, inp):
+            x_t, m_t = inp
+            h_new = self.step(params, h, x_t)
+            if m_t is not None:
+                h_new = jnp.where(m_t[:, None] > 0, h_new, h)
+            return h_new, h_new
+
+        xs = jnp.swapaxes(x, 0, 1)
+        ms = jnp.swapaxes(mask, 0, 1) if mask is not None else jnp.ones((T, B), x.dtype)
+        if unroll:
+            h, hs = h0, []
+            for t in range(T):
+                h, _ = body(h, (xs[t], ms[t]))
+                hs.append(h)
+            return jnp.stack(hs, axis=1), h
+        h_T, hs = jax.lax.scan(body, h0, (xs, ms))
+        return jnp.swapaxes(hs, 0, 1), h_T
+
+
+@dataclasses.dataclass(frozen=True)
+class AUGRU:
+    """GRU with Attentional Update Gate (DIEN interest-evolution layer):
+    the update gate is scaled by the attention score of each step to the
+    target item."""
+
+    in_dim: int
+    hidden: int
+
+    def init(self, key) -> Params:
+        return GRU(self.in_dim, self.hidden).init(key)
+
+    def apply(self, params, x, att, h0=None, mask=None, unroll=False):
+        """x: (B,T,in); att: (B,T) attention scores in [0,1]."""
+        B, T, _ = x.shape
+        gru = GRU(self.in_dim, self.hidden)
+        h0 = jnp.zeros((B, self.hidden), x.dtype) if h0 is None else h0
+
+        def body(h, inp):
+            x_t, a_t, m_t = inp
+            z, n = gru._gates(params, x_t, h)
+            z = a_t[:, None] * z
+            h_new = (1.0 - z) * h + z * n
+            h_new = jnp.where(m_t[:, None] > 0, h_new, h)
+            return h_new, h_new
+
+        xs = jnp.swapaxes(x, 0, 1)
+        as_ = jnp.swapaxes(att, 0, 1)
+        ms = jnp.swapaxes(mask, 0, 1) if mask is not None else jnp.ones((T, B), x.dtype)
+        if unroll:
+            h, hs = h0, []
+            for t in range(T):
+                h, _ = body(h, (xs[t], as_[t], ms[t]))
+                hs.append(h)
+            return jnp.stack(hs, axis=1), h
+        h_T, hs = jax.lax.scan(body, h0, (xs, as_, ms))
+        return jnp.swapaxes(hs, 0, 1), h_T

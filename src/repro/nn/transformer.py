@@ -1,0 +1,212 @@
+"""Transformer block + scanned layer stack for the LM family.
+
+The stack is a ``jax.lax.scan`` over stacked per-layer parameters so that HLO
+size and compile time stay O(1) in depth (essential for the 512-device
+dry-runs of 40–64 layer models). Optional remat policies control the
+activation-memory / recompute trade-off.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.attention import GQAttention, MLAttention
+from repro.nn.layers import GatedMLP, LayerNorm, RMSNorm
+from repro.nn.moe import MoELayer
+from repro.nn.module import KeyGen
+
+Params = Any
+
+REMAT_POLICIES = {
+    "none": None,
+    "full": jax.checkpoint_policies.nothing_saveable,
+    "dots": jax.checkpoint_policies.checkpoint_dots,
+    "dots_no_batch": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    attention: str = "gqa"         # "gqa" | "mla"
+    norm: str = "rmsnorm"          # "rmsnorm" | "layernorm"
+    qk_norm: bool = False
+    use_bias: bool = False
+    activation: str = "silu"
+    rope_theta: float = 10000.0
+    # MLA
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 1536
+    nope_head_dim: int = 128
+    rope_head_dim: int = 64
+    v_head_dim: int = 128
+    # MoE (None -> dense FFN)
+    moe: Optional[dict] = None     # dict(n_experts, top_k, n_shared, d_ff)
+    q_chunk_unroll: bool = False   # unroll chunked-attention scan (roofline)
+
+    def attn_module(self):
+        if self.attention == "mla":
+            return MLAttention(
+                d_model=self.d_model,
+                n_heads=self.n_heads,
+                kv_lora_rank=self.kv_lora_rank,
+                q_lora_rank=self.q_lora_rank,
+                nope_head_dim=self.nope_head_dim,
+                rope_head_dim=self.rope_head_dim,
+                v_head_dim=self.v_head_dim,
+                rope_theta=self.rope_theta,
+                q_chunk_unroll=self.q_chunk_unroll,
+            )
+        return GQAttention(
+            d_model=self.d_model,
+            n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads,
+            head_dim=self.head_dim,
+            qk_norm=self.qk_norm,
+            use_bias=self.use_bias,
+            rope_theta=self.rope_theta,
+            q_chunk_unroll=self.q_chunk_unroll,
+        )
+
+    def norm_module(self):
+        return RMSNorm(self.d_model) if self.norm == "rmsnorm" else LayerNorm(self.d_model)
+
+    def ffn_module(self):
+        if self.moe is not None:
+            return MoELayer(
+                d_model=self.d_model,
+                d_ff=self.moe["d_ff"],
+                n_experts=self.moe["n_experts"],
+                top_k=self.moe["top_k"],
+                n_shared=self.moe.get("n_shared", 0),
+                activation=self.activation,
+            )
+        return GatedMLP(self.d_model, self.d_ff, self.activation, self.use_bias)
+
+
+@dataclasses.dataclass(frozen=True)
+class Block:
+    cfg: BlockConfig
+
+    def init(self, key) -> Params:
+        kg = KeyGen(key)
+        c = self.cfg
+        return {
+            "ln1": c.norm_module().init(kg()),
+            "attn": c.attn_module().init(kg()),
+            "ln2": c.norm_module().init(kg()),
+            "ffn": c.ffn_module().init(kg()),
+        }
+
+    def apply(self, params, x, positions=None, mask=None, mesh=None):
+        """Returns (x, aux_loss)."""
+        from repro.distributed.mesh_ctx import MeshCtx
+
+        c = self.cfg
+        ctx = mesh if isinstance(mesh, MeshCtx) else None
+        h = c.attn_module().apply(params["attn"], c.norm_module().apply(params["ln1"], x),
+                                  positions=positions, mask=mask)
+        x = x + h
+        if ctx is not None:
+            x = ctx.constrain_residual(x)
+        ffn_in = c.norm_module().apply(params["ln2"], x)
+        if c.moe is not None:
+            h, aux = c.ffn_module().apply(params["ffn"], ffn_in, mesh=mesh)
+        elif ctx is not None and ctx.manual_tp and not c.use_bias:
+            from repro.distributed.manual_tp import manual_tp_gated_ffn
+
+            h, aux = manual_tp_gated_ffn(ffn_in, params["ffn"], ctx,
+                                         c.activation), jnp.float32(0.0)
+        else:
+            h, aux = c.ffn_module().apply(params["ffn"], ffn_in), jnp.float32(0.0)
+        x = x + h
+        if ctx is not None:
+            x = ctx.constrain_residual(x)
+        return x, aux
+
+    def decode_step(self, params, x, cache, cache_len, mesh=None):
+        c = self.cfg
+        h, new_cache = c.attn_module().decode_step(
+            params["attn"], c.norm_module().apply(params["ln1"], x), cache, cache_len
+        )
+        x = x + h
+        ffn_in = c.norm_module().apply(params["ln2"], x)
+        if c.moe is not None:
+            h, _ = c.ffn_module().apply(params["ffn"], ffn_in, mesh=mesh)
+        else:
+            h = c.ffn_module().apply(params["ffn"], ffn_in)
+        return x + h, new_cache
+
+
+@dataclasses.dataclass(frozen=True)
+class Stack:
+    """n_layers homogeneous blocks with stacked params, run under lax.scan.
+
+    ``unroll=True`` lowers the stack as a flat per-layer loop instead: same
+    math, O(depth) HLO. Used by the roofline dry-run because XLA's
+    cost_analysis counts a while-loop body ONCE regardless of trip count —
+    scan-lowered programs under-report FLOPs/collectives by ~n_layers×.
+    """
+
+    cfg: BlockConfig
+    n_layers: int
+    remat: str = "none"
+    unroll: bool = False
+
+    def init(self, key) -> Params:
+        keys = jax.random.split(key, self.n_layers)
+        return jax.vmap(Block(self.cfg).init)(keys)
+
+    def apply(self, params, x, positions=None, mask=None, mesh=None):
+        block = Block(self.cfg)
+
+        def body(carry, layer_params):
+            h, aux = carry
+            h, aux_l = block.apply(layer_params, h, positions=positions, mask=mask, mesh=mesh)
+            return (h, aux + aux_l), None
+
+        policy = REMAT_POLICIES[self.remat]
+        if self.remat != "none":
+            body = jax.checkpoint(body, policy=policy, prevent_cse=False)
+        if self.unroll:
+            carry = (x, jnp.float32(0.0))
+            for i in range(self.n_layers):
+                layer = jax.tree_util.tree_map(lambda p: p[i], params)
+                carry, _ = body(carry, layer)
+            return carry
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), params)
+        return x, aux
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        cache1 = self.cfg.attn_module().init_cache(batch, max_len, dtype)
+        return jax.tree_util.tree_map(
+            lambda c: jnp.broadcast_to(c[None], (self.n_layers, *c.shape)), cache1
+        )
+
+    def decode_step(self, params, x, caches, cache_len, mesh=None):
+        block = Block(self.cfg)
+
+        def body(carry, scanned):
+            h = carry
+            layer_params, cache = scanned
+            h, new_cache = block.decode_step(layer_params, h, cache, cache_len, mesh=mesh)
+            return h, new_cache
+
+        if self.unroll:
+            news = []
+            for i in range(self.n_layers):
+                sl = jax.tree_util.tree_map(lambda p: p[i], (params, caches))
+                x, nc = body(x, sl)
+                news.append(nc)
+            new_caches = jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *news)
+            return x, new_caches
+        x, new_caches = jax.lax.scan(body, x, (params, caches))
+        return x, new_caches

@@ -1,0 +1,93 @@
+"""BSE server (paper §4.4): user-wise behavior-sequence hashing, decoupled
+from the CTR server.
+
+Responsibilities modeled faithfully:
+  * maintain per-user bucket tables (the FULL serving state: (G, U, d),
+    L-free — "no matter how long the user's behavior is, we only need to
+    transmit fixed-length vectors");
+  * ingest real-time behavior events incrementally (O(m·d) per event, no
+    re-encode of history);
+  * answer CTR-server fetches, accounting transmission bytes (the paper's
+    8KB / ~1ms budget).
+
+The embedding of raw behavior ids depends on the CTR model's current tables,
+so the server holds an ``embed_fn`` + params snapshot; ``refresh_params``
+models the model-push cycle after each training deployment.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bse
+
+
+@dataclasses.dataclass
+class BSEStats:
+    n_encodes: int = 0
+    n_updates: int = 0
+    n_fetches: int = 0
+    bytes_transmitted: int = 0
+    encode_time_s: float = 0.0
+
+
+class BSEServer:
+    def __init__(
+        self,
+        embed_fn: Callable[[Any, np.ndarray, np.ndarray], jax.Array],
+        params: Any,
+        R: jax.Array,
+        tau: int,
+    ):
+        self.embed_fn = embed_fn
+        self.params = params
+        self.R = R
+        self.tau = tau
+        self.tables: dict[Any, jax.Array] = {}
+        self.stats = BSEStats()
+        self._encode = jax.jit(
+            lambda seq_e, mask: bse.encode_sequence(seq_e, mask, self.R, self.tau)
+        )
+
+    def refresh_params(self, params: Any) -> None:
+        """Model push: new embeddings invalidate all tables (re-encoded lazily)."""
+        self.params = params
+        self.tables.clear()
+
+    def ingest_history(self, user: Any, items: np.ndarray, cats: np.ndarray,
+                       mask: Optional[np.ndarray] = None) -> None:
+        """Full (re-)encode of a user's history."""
+        t0 = time.perf_counter()
+        seq_e = self.embed_fn(self.params, items[None], cats[None])     # (1, L, d)
+        m = jnp.asarray(mask[None]) if mask is not None else None
+        table = self._encode(seq_e, m)[0]
+        table.block_until_ready()
+        self.stats.encode_time_s += time.perf_counter() - t0
+        self.stats.n_encodes += 1
+        self.tables[user] = table
+
+    def ingest_event(self, user: Any, item: int, cat: int) -> None:
+        """Real-time behavior event: incremental O(m·d) table update."""
+        new_e = self.embed_fn(self.params, np.array([[item]]), np.array([[cat]]))[0]
+        if user in self.tables:
+            self.tables[user] = bse.update_table(self.tables[user], new_e, self.R, self.tau)
+        else:
+            self.tables[user] = bse.encode_sequence(new_e, None, self.R, self.tau)
+        self.stats.n_updates += 1
+
+    def fetch(self, user: Any) -> Optional[jax.Array]:
+        """CTR-server fetch; accounts the fixed-size transmission."""
+        table = self.tables.get(user)
+        if table is not None:
+            self.stats.n_fetches += 1
+            self.stats.bytes_transmitted += table.size * 2  # bf16 on the wire
+        return table
+
+    def table_bytes(self) -> int:
+        t = next(iter(self.tables.values()), None)
+        return 0 if t is None else t.size * 2

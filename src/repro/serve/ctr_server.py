@@ -1,0 +1,77 @@
+"""CTR server (paper §4.4, Fig. 1): scores B candidate items per request.
+
+Two deployments, matching the paper's ablation:
+  * ``mode="decoupled"`` — fetch the user's bucket table from the BSE server
+    (latency-free long-term interest: candidate hashing only, O(B·m·log d));
+  * ``mode="inline"``    — hash the raw behavior sequence inside the request
+    (what SDIM costs *without* the BSE split);
+  * ``mode="target_attention"`` — exact long-seq attention (the DIN(Long
+    Seq.) deployment the paper could not keep online).
+
+``ServeStats`` records wall-clock per stage for benchmarks/table5.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.ctr import CTRModel
+from repro.serve.bse_server import BSEServer
+
+
+@dataclasses.dataclass
+class ServeStats:
+    n_requests: int = 0
+    total_time_s: float = 0.0
+    fetch_time_s: float = 0.0
+
+    @property
+    def ms_per_request(self) -> float:
+        return 1e3 * self.total_time_s / max(self.n_requests, 1)
+
+
+class CTRServer:
+    def __init__(self, model: CTRModel, params: Any,
+                 bse_server: Optional[BSEServer] = None, mode: str = "decoupled"):
+        assert mode in ("decoupled", "inline", "target_attention")
+        if mode == "decoupled":
+            assert bse_server is not None
+        self.model = model
+        self.params = params
+        self.bse = bse_server
+        self.mode = mode
+        self.stats = ServeStats()
+        self._score_table = jax.jit(
+            lambda p, u, ci, cc, ctx, tb: model.score_candidates(
+                p, u, ci, cc, ctx, bucket_table=tb)
+        )
+        self._score_raw = jax.jit(model.score_candidates)
+
+    def handle_request(self, user: Any, user_batch: dict,
+                       cand_items, cand_cats, ctx) -> jax.Array:
+        """user_batch: hist_* (1, L) arrays (only used by non-decoupled modes)."""
+        t0 = time.perf_counter()
+        if self.mode == "decoupled":
+            tf0 = time.perf_counter()
+            table = self.bse.fetch(user)
+            if table is None:
+                self.bse.ingest_history(
+                    user, np.asarray(user_batch["hist_items"][0]),
+                    np.asarray(user_batch["hist_cats"][0]),
+                    np.asarray(user_batch["hist_mask"][0]),
+                )
+                table = self.bse.fetch(user)
+            self.stats.fetch_time_s += time.perf_counter() - tf0
+            scores = self._score_table(self.params, user_batch, cand_items,
+                                       cand_cats, ctx, table[None])
+        else:
+            scores = self._score_raw(self.params, user_batch, cand_items, cand_cats, ctx)
+        scores.block_until_ready()
+        self.stats.total_time_s += time.perf_counter() - t0
+        self.stats.n_requests += 1
+        return scores

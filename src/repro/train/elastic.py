@@ -1,0 +1,54 @@
+"""Elastic scaling: restore any checkpoint onto any mesh.
+
+The checkpoint format is mesh-agnostic (full logical arrays). Re-meshing is
+then just: build the new mesh, derive each param's PartitionSpec from the
+sharding rules, and ``device_put`` with the new ``NamedSharding`` during
+restore. Works across different DP degrees, TP degrees, and device counts —
+the elastic-restart path after losing (or gaining) pods.
+
+``scale_batch_for_mesh`` keeps the *global* batch constant across re-meshes
+so the optimizer trajectory is preserved (the data stream is deterministic in
+global step, not in device count).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.train import checkpoint as ckpt_lib
+
+Params = Any
+
+
+def sharding_fn_from_rules(
+    mesh: Mesh, rules: Callable[[str, tuple], Optional[P]]
+) -> Callable[[str, tuple], Optional[NamedSharding]]:
+    def fn(path: str, shape: tuple):
+        spec = rules(path, shape)
+        if spec is None:
+            spec = P()
+        return NamedSharding(mesh, spec)
+
+    return fn
+
+
+def restore_on_mesh(
+    ckpt_dir: str,
+    template: Params,
+    mesh: Mesh,
+    rules: Callable[[str, tuple], Optional[P]],
+    step: Optional[int] = None,
+):
+    """Restore checkpoint resharded for ``mesh`` (elastic restart)."""
+    return ckpt_lib.restore(
+        ckpt_dir, template, step, sharding_fn=sharding_fn_from_rules(mesh, rules)
+    )
+
+
+def scale_batch_for_mesh(global_batch: int, mesh: Mesh, data_axis: str = "data") -> int:
+    """Per-shard batch for this mesh, holding the global batch fixed."""
+    dp = mesh.shape[data_axis]
+    assert global_batch % dp == 0, (global_batch, dp)
+    return global_batch // dp

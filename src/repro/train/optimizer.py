@@ -1,0 +1,187 @@
+"""Pure-JAX optimizers (no optax in this environment — part of the substrate).
+
+AdamW / Adagrad / momentum-SGD with:
+  * LR schedules (constant, warmup-cosine, warmup-rsqrt) evaluated in-graph;
+  * global-norm gradient clipping;
+  * a *trainability mask* by param path — anything under a ``buffers`` subtree
+    (e.g. the SDIM hash matrices R) is never updated nor decayed;
+  * weight-decay mask (no decay on norms/bias/1-d params);
+  * optional error-feedback gradient compression hook (see compression.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    kind: str = "adamw"                 # adamw | adagrad | sgd
+    lr: float = 1e-3
+    schedule: str = "constant"          # constant | warmup_cosine | warmup_rsqrt
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    momentum: float = 0.9
+    clip_norm: Optional[float] = 1.0
+    # keep an f32 master copy in the optimizer state and store model params
+    # in bf16: every param all-gather / grad all-reduce moves bf16 wire bytes
+    master_weights: bool = False
+
+
+def schedule_fn(cfg: OptimizerConfig) -> Callable[[jax.Array], jax.Array]:
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+        if cfg.schedule == "constant":
+            return cfg.lr * warm
+        if cfg.schedule == "warmup_cosine":
+            t = jnp.clip((step - cfg.warmup_steps) /
+                         max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+            cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+            return cfg.lr * warm * (cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos)
+        if cfg.schedule == "warmup_rsqrt":
+            return cfg.lr * warm * jax.lax.rsqrt(jnp.maximum(step, cfg.warmup_steps * 1.0)) \
+                * jnp.sqrt(1.0 * max(cfg.warmup_steps, 1))
+        raise ValueError(cfg.schedule)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# masks
+# ---------------------------------------------------------------------------
+def _paths_mask(params: Params, pred) -> Params:
+    def mapper(path, leaf):
+        s = jax.tree_util.keystr(path)
+        return pred(s, leaf)
+
+    return jax.tree_util.tree_map_with_path(mapper, params)
+
+
+def trainable_mask(params: Params) -> Params:
+    """False for fixed buffers (SDIM hash matrices etc.)."""
+    return _paths_mask(params, lambda s, l: "buffers" not in s)
+
+
+def decay_mask(params: Params) -> Params:
+    """True where weight decay applies: ≥2-d non-norm non-bias weights."""
+    return _paths_mask(
+        params,
+        lambda s, l: l.ndim >= 2 and "buffers" not in s
+        and not any(t in s for t in ("ln", "norm", "bias", "scale")),
+    )
+
+
+def global_norm(tree: Params) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def clip_by_global_norm(grads: Params, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree_util.tree_map(lambda g: (g * scale).astype(g.dtype), grads), norm
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+def init_opt_state(params: Params, cfg: OptimizerConfig) -> dict:
+    zeros = lambda p: jax.tree_util.tree_map(lambda x: jnp.zeros_like(x, jnp.float32), p)
+    state: dict[str, Any] = {"count": jnp.zeros((), jnp.int32)}
+    if cfg.master_weights:
+        state["master"] = jax.tree_util.tree_map(
+            lambda x: x.astype(jnp.float32), params)
+    if cfg.kind == "adamw":
+        state["m"] = zeros(params)
+        state["v"] = zeros(params)
+    elif cfg.kind == "adagrad":
+        state["v"] = zeros(params)
+    elif cfg.kind == "sgd":
+        state["m"] = zeros(params)
+    else:
+        raise ValueError(cfg.kind)
+    return state
+
+
+def apply_updates(params: Params, grads: Params, state: dict, cfg: OptimizerConfig):
+    """Returns (new_params, new_state, metrics)."""
+    metrics = {}
+    model_dtypes = jax.tree_util.tree_map(lambda x: x.dtype, params)
+    if cfg.master_weights:
+        params = state["master"]
+    if cfg.clip_norm is not None:
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+        metrics["grad_norm"] = gnorm
+    step = state["count"]
+    lr = schedule_fn(cfg)(step)
+    metrics["lr"] = lr
+    tmask = trainable_mask(params)
+    dmask = decay_mask(params)
+
+    if cfg.kind == "adamw":
+        b1, b2 = cfg.b1, cfg.b2
+        t = (step + 1).astype(jnp.float32)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+
+        def upd(p, g, m, v, train, decay):
+            gf = g.astype(jnp.float32)
+            m_new = b1 * m + (1 - b1) * gf
+            v_new = b2 * v + (1 - b2) * gf * gf
+            u = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + cfg.eps)
+            if cfg.weight_decay:
+                u = u + cfg.weight_decay * jnp.where(decay, p.astype(jnp.float32), 0.0)
+            p_new = p.astype(jnp.float32) - lr * u
+            p_new = jnp.where(train, p_new, p.astype(jnp.float32))
+            return p_new.astype(p.dtype), jnp.where(train, m_new, m), jnp.where(train, v_new, v)
+
+        out = jax.tree_util.tree_map(upd, params, grads, state["m"], state["v"], tmask, dmask)
+        new_params = jax.tree_util.tree_map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree_util.tree_map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree_util.tree_map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_state = {"count": step + 1, "m": new_m, "v": new_v}
+
+    elif cfg.kind == "adagrad":
+        def upd(p, g, v, train):
+            gf = g.astype(jnp.float32)
+            v_new = v + gf * gf
+            p_new = p.astype(jnp.float32) - lr * gf / (jnp.sqrt(v_new) + cfg.eps)
+            p_new = jnp.where(train, p_new, p.astype(jnp.float32))
+            return p_new.astype(p.dtype), jnp.where(train, v_new, v)
+
+        out = jax.tree_util.tree_map(upd, params, grads, state["v"], tmask)
+        new_params = jax.tree_util.tree_map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree_util.tree_map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_state = {"count": step + 1, "v": new_v}
+
+    elif cfg.kind == "sgd":
+        def upd(p, g, m, train):
+            gf = g.astype(jnp.float32)
+            m_new = cfg.momentum * m + gf
+            p_new = p.astype(jnp.float32) - lr * m_new
+            p_new = jnp.where(train, p_new, p.astype(jnp.float32))
+            return p_new.astype(p.dtype), jnp.where(train, m_new, m)
+
+        out = jax.tree_util.tree_map(upd, params, grads, state["m"], tmask)
+        new_params = jax.tree_util.tree_map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree_util.tree_map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_state = {"count": step + 1, "m": new_m}
+    else:
+        raise ValueError(cfg.kind)
+
+    if cfg.master_weights:
+        new_state["master"] = new_params
+        new_params = jax.tree_util.tree_map(
+            lambda x, dt: x.astype(dt), new_params, model_dtypes)
+    return new_params, new_state, metrics

@@ -1,0 +1,199 @@
+"""SDIM core: paper-faithfulness properties (Eq. 8–15, Appendix A) +
+hypothesis property-based tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bse, sdim, simhash
+from repro.core.target_attention import target_attention
+
+
+# ---------------------------------------------------------------------------
+# formulation equivalences
+# ---------------------------------------------------------------------------
+@given(
+    B=st.integers(1, 4), L=st.sampled_from([16, 64]),
+    d=st.sampled_from([8, 32]), tau=st.sampled_from([1, 2, 3]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=25, deadline=None)
+def test_bucket_form_equals_gather_form(B, L, d, tau, seed):
+    m = 4 * tau
+    k = jax.random.PRNGKey(seed)
+    k1, k2, k3, k4 = jax.random.split(k, 4)
+    seq = jax.random.normal(k1, (B, L, d))
+    q = jax.random.normal(k2, (B, d))
+    mask = (jax.random.uniform(k3, (B, L)) > 0.3).astype(jnp.float32)
+    R = simhash.make_hashes(k4, m, d)
+    a = sdim.sdim_attention(q, seq, mask, R, tau)
+    b = sdim.sdim_attention_gather(q, seq, mask, R, tau)
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+@given(seed=st.integers(0, 2**31 - 1), tau=st.sampled_from([2, 3]))
+@settings(max_examples=10, deadline=None)
+def test_bse_encode_query_equals_sdim(seed, tau):
+    B, L, C, d, m = 2, 64, 8, 16, 6 * tau
+    k = jax.random.PRNGKey(seed)
+    k1, k2, k3, k4 = jax.random.split(k, 4)
+    seq = jax.random.normal(k1, (B, L, d))
+    q = jax.random.normal(k2, (B, C, d))
+    mask = (jax.random.uniform(k3, (B, L)) > 0.3).astype(jnp.float32)
+    R = simhash.make_hashes(k4, m, d)
+    table = bse.encode_sequence(seq, mask, R, tau)
+    out = bse.query_interest(table, q, R, tau)
+    ref = sdim.sdim_attention(q, seq, mask, R, tau)
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-6)
+
+
+@given(seed=st.integers(0, 2**31 - 1), split=st.integers(1, 63))
+@settings(max_examples=10, deadline=None)
+def test_bse_incremental_update(seed, split):
+    """Folding events into a table == re-encoding the whole history."""
+    L, d, m, tau = 64, 16, 12, 2
+    k = jax.random.PRNGKey(seed)
+    seq = jax.random.normal(k, (L, d))
+    R = simhash.make_hashes(jax.random.PRNGKey(1), m, d)
+    t1 = bse.encode_sequence(seq[:split], None, R, tau)
+    t2 = bse.update_table(t1, seq[split:], R, tau)
+    ref = bse.encode_sequence(seq, None, R, tau)
+    np.testing.assert_allclose(t2, ref, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# the paper's probability law (Eq. 13) and limits (§4.2.2)
+# ---------------------------------------------------------------------------
+def test_collision_probability_matches_theory():
+    """Empirical SimHash collision rate == 1 - arccos(cos θ)/π within MC err."""
+    d, n_hash = 32, 20000
+    key = jax.random.PRNGKey(0)
+    R = simhash.make_hashes(key, n_hash, d)
+    for seed in range(5):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed + 1))
+        x = jax.random.normal(k1, (d,))
+        y = x + 0.7 * jax.random.normal(k2, (d,))
+        cos = jnp.dot(x, y) / (jnp.linalg.norm(x) * jnp.linalg.norm(y))
+        p_emp = jnp.mean((simhash.hash_codes(x, R) == simhash.hash_codes(y, R)).astype(jnp.float32))
+        p_th = 1 - jnp.arccos(jnp.clip(cos, -1, 1)) / jnp.pi
+        assert abs(float(p_emp - p_th)) < 0.015, (seed, float(p_emp), float(p_th))
+
+
+def test_signature_collision_is_tau_power():
+    """P[signature collision] == p^τ (independent hashes per group)."""
+    d, m, tau = 16, 30000, 3
+    R = simhash.make_hashes(jax.random.PRNGKey(0), m, d)
+    x = jax.random.normal(jax.random.PRNGKey(1), (d,))
+    y = x + 0.5 * jax.random.normal(jax.random.PRNGKey(2), (d,))
+    sx = simhash.signatures(x, R, tau)
+    sy = simhash.signatures(y, R, tau)
+    p_sig = jnp.mean((sx == sy).astype(jnp.float32))
+    cos = jnp.dot(x, y) / (jnp.linalg.norm(x) * jnp.linalg.norm(y))
+    p_th = float(simhash.collision_expectation(cos, tau))
+    assert abs(float(p_sig) - p_th) < 0.02
+
+
+def test_entropy_monotonically_decreasing_in_tau():
+    """Appendix A: H(w(τ)) strictly decreases with τ."""
+    rng = np.random.default_rng(0)
+    cos = np.clip(rng.uniform(-0.9, 0.9, 200), -1, 1)
+    hs = []
+    for tau in [1, 2, 3, 5, 10]:
+        w = (1 - np.arccos(cos) / np.pi) ** tau
+        w = w / w.sum()
+        hs.append(float(-(w * np.log(w + 1e-30)).sum()))
+    assert all(hs[i] > hs[i + 1] for i in range(len(hs) - 1)), hs
+
+
+def test_tau_zero_degenerates_to_mean_pooling():
+    """τ=0 ⇒ all items share the (empty) signature ⇒ ℓ2(mean-pooled sum)."""
+    B, L, d = 2, 32, 8
+    seq = jax.random.normal(jax.random.PRNGKey(0), (B, L, d))
+    q = jax.random.normal(jax.random.PRNGKey(1), (B, d))
+    w = simhash.collision_expectation(jnp.zeros((B, L)), 0)
+    assert bool(jnp.all(w == 1.0))
+
+
+def test_large_tau_attends_only_identical_items():
+    """τ→∞ limit: expected weight ≈ 0 unless cos θ = 1 (SIM-hard behavior)."""
+    w_same = simhash.collision_expectation(jnp.float32(1.0), 50)
+    w_near = simhash.collision_expectation(jnp.float32(0.5), 50)
+    assert float(w_same) == 1.0
+    assert float(w_near) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# estimator convergence (paper: m/τ ≥ 16 suffices; Fig. 5)
+# ---------------------------------------------------------------------------
+def test_sdim_converges_to_expectation_with_m():
+    B, L, d, tau = 4, 128, 32, 3
+    k = jax.random.PRNGKey(0)
+    seq = sdim.l2_normalize(jax.random.normal(k, (B, L, d)))
+    q = sdim.l2_normalize(jax.random.normal(jax.random.PRNGKey(1), (B, d)))
+    expected = sdim.sdim_expected_attention(q, seq, None, tau)
+    errs = []
+    for m in [6, 48, 768]:
+        R = simhash.make_hashes(jax.random.PRNGKey(2), m, d)
+        out = sdim.sdim_attention(q, seq, None, R, tau)
+        e_n = sdim.l2_normalize(expected)
+        o_n = sdim.l2_normalize(out)
+        errs.append(float(jnp.mean(1 - jnp.sum(e_n * o_n, -1))))
+    assert errs[0] > errs[-1], errs  # error shrinks as m grows
+
+
+def test_sdim_attention_pattern_close_to_target_attention():
+    """Fig. 2: (1-arccos/π)^3 tracks exp(x/0.5) up to normalization — the
+    cosine similarity between the two attention-weight vectors is high."""
+    x = np.linspace(-1, 1, 201)
+    w_sdim = (1 - np.arccos(x) / np.pi) ** 3
+    w_ta = np.exp((x - 1) / 0.5)
+    cos = (w_sdim * w_ta).sum() / (np.linalg.norm(w_sdim) * np.linalg.norm(w_ta))
+    assert cos > 0.98, cos
+
+
+# ---------------------------------------------------------------------------
+# padding / masking invariants
+# ---------------------------------------------------------------------------
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_masked_items_never_contribute(seed):
+    B, L, d, m, tau = 2, 32, 16, 12, 2
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    seq = jax.random.normal(k1, (B, L, d))
+    q = jax.random.normal(k2, (B, d))
+    R = simhash.make_hashes(k3, m, d)
+    mask = jnp.concatenate([jnp.zeros((B, L // 2)), jnp.ones((B, L // 2))], axis=1)
+    out1 = sdim.sdim_attention(q, seq, mask, R, tau)
+    # garbage in the masked half must not change anything
+    seq2 = seq.at[:, : L // 2].set(1e3)
+    out2 = sdim.sdim_attention(q, seq2, mask, R, tau)
+    np.testing.assert_allclose(out1, out2, rtol=1e-5, atol=1e-6)
+
+
+def test_l2_normalize_zero_safe():
+    z = jnp.zeros((3, 8))
+    out = sdim.l2_normalize(z)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+# ---------------------------------------------------------------------------
+# SRHT fast projection behaves like dense SimHash
+# ---------------------------------------------------------------------------
+def test_srht_collision_matches_theory():
+    d, m = 64, 48
+    h = simhash.srht_hashes(jax.random.PRNGKey(0), m, d)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (4000, d))
+    ys = xs + 0.6 * jax.random.normal(jax.random.PRNGKey(2), (4000, d))
+    cos = jnp.sum(xs * ys, -1) / (jnp.linalg.norm(xs, axis=-1) * jnp.linalg.norm(ys, axis=-1))
+    match = jnp.mean((h.codes(xs) == h.codes(ys)).astype(jnp.float32))
+    theory = jnp.mean(1 - jnp.arccos(jnp.clip(cos, -1, 1)) / jnp.pi)
+    assert abs(float(match - theory)) < 0.02
+
+
+def test_fwht_orthogonality():
+    """FWHT is self-inverse up to d scaling."""
+    d = 64
+    x = jax.random.normal(jax.random.PRNGKey(0), (5, d))
+    y = simhash.fwht(simhash.fwht(x)) / d
+    np.testing.assert_allclose(y, x, rtol=1e-4, atol=1e-5)

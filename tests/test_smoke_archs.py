@@ -1,0 +1,151 @@
+"""Per-arch smoke tests (deliverable f): every assigned architecture
+instantiates a REDUCED config and runs one forward/train step on CPU,
+asserting output shapes and no NaNs. Full configs are exercised only via the
+dry-run (ShapeDtypeStruct, no allocation)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.data.graph import molecule_batch, random_graph
+from repro.data.synthetic import SyntheticCTRConfig, generate_batch
+
+LM_ARCHS = ["granite-3-2b", "command-r-plus-104b", "qwen3-8b",
+            "deepseek-v2-236b", "deepseek-moe-16b"]
+RECSYS_ARCHS = ["wide-deep", "bst", "dien", "bert4rec", "sdim-paper"]
+
+
+def _finite(x):
+    return bool(jnp.all(jnp.isfinite(x)))
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_smoke_train_step(arch):
+    from repro.models.lm import LMModel
+
+    cfg = registry.get(arch).SMOKE
+    model = LMModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
+    tgts = jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0, cfg.vocab)
+    loss, grads = jax.value_and_grad(model.loss)(params, toks, tgts)
+    assert loss.shape == ()
+    assert _finite(loss)
+    assert all(_finite(g) for g in jax.tree_util.tree_leaves(grads))
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_smoke_decode(arch):
+    from repro.models.lm import LMModel
+
+    cfg = registry.get(arch).SMOKE
+    model = LMModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 1), 0, cfg.vocab)
+    caches = model.init_cache(2, 8, jnp.float32)
+    logits, caches = model.decode_step(params, toks, caches, 0)
+    assert logits.shape == (2, 1, cfg.vocab)
+    assert _finite(logits)
+    # SDIM-compressed decode (paper technique on the LM family)
+    sc = model.init_sdim_cache(2)
+    logits2, sc = model.sdim_decode_step(params, toks, sc)
+    assert logits2.shape == (2, 1, cfg.vocab)
+    assert _finite(logits2)
+
+
+@pytest.mark.parametrize("arch", RECSYS_ARCHS)
+def test_recsys_smoke_train_step(arch):
+    from repro.models.ctr import CTRModel
+
+    cfg = registry.get(arch).SMOKE
+    model = CTRModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    dcfg = SyntheticCTRConfig(hist_len=cfg.long_len, n_items=cfg.n_items,
+                              n_cats=cfg.n_cats)
+    batch = {k: jnp.asarray(v) for k, v in generate_batch(dcfg, 8, 0).items()}
+    if cfg.arch == "wide_deep":
+        batch["sparse_ids"] = jnp.asarray(
+            np.random.default_rng(0).integers(0, cfg.field_vocab,
+                                              (8, cfg.n_sparse)).astype(np.int32))
+    (loss, logits), grads = jax.value_and_grad(model.loss, has_aux=True)(params, batch)
+    assert logits.shape == (8,)
+    assert _finite(loss)
+    assert all(_finite(g) for g in jax.tree_util.tree_leaves(grads))
+
+
+@pytest.mark.parametrize("arch", RECSYS_ARCHS)
+def test_recsys_smoke_serve(arch):
+    from repro.models.ctr import CTRModel
+
+    cfg = registry.get(arch).SMOKE
+    model = CTRModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    dcfg = SyntheticCTRConfig(hist_len=cfg.long_len, n_items=cfg.n_items,
+                              n_cats=cfg.n_cats)
+    raw = generate_batch(dcfg, 1, 0)
+    user = {k: jnp.asarray(v) for k, v in raw.items() if k.startswith("hist")}
+    C = 16
+    rng = np.random.default_rng(0)
+    ci = jnp.asarray(rng.integers(0, cfg.n_items, C).astype(np.int32))
+    cc = jnp.asarray(rng.integers(0, cfg.n_cats, C).astype(np.int32))
+    ctx = jnp.zeros((C, 4))
+    sparse = (jnp.asarray(rng.integers(0, cfg.field_vocab, (C, cfg.n_sparse)).astype(np.int32))
+              if cfg.arch == "wide_deep" else None)
+    scores = model.score_candidates(params, user, ci, cc, ctx, sparse_ids=sparse)
+    assert scores.shape == (C,)
+    assert _finite(scores)
+
+
+@pytest.mark.parametrize("shape_name", list(registry.GNN_SHAPES))
+def test_gnn_smoke(shape_name):
+    from repro.models.gnn import GatedGCN
+
+    shape = registry.GNN_SHAPES[shape_name]
+    base = registry.get("gatedgcn").SMOKE
+    if shape["kind"] == "graph_batch":
+        cfg = dataclasses.replace(base, d_feat=8, d_edge=4, n_classes=1, readout="graph")
+        g = molecule_batch(batch=4, n_nodes=10, n_edges=16, d_feat=8, d_edge=4)
+        graph = {k: (jnp.asarray(v) if isinstance(v, np.ndarray) else v) for k, v in g.items()}
+    else:
+        cfg = dataclasses.replace(base, d_feat=16, n_classes=4, readout="node")
+        g = random_graph(100, 400, 16, seed=1, n_classes=4)
+        graph = {k: jnp.asarray(v) for k, v in g.items()}
+        if shape["kind"] == "sampled":
+            # reduced sampled block: seeds 8, fanout (3, 2)
+            from repro.data.graph import NeighborSampler
+
+            ns = NeighborSampler(g["edge_index"], 100, [3, 2], seed=0)
+            blk = ns.sample(np.arange(8))
+            # flatten the layered block into one padded subgraph (framework
+            # convention: deep GNN runs on the union subgraph)
+            nodes = np.unique(np.concatenate(blk["all_nodes"]))
+            remap = {n: i for i, n in enumerate(nodes)}
+            srcs, dsts, masks = [], [], []
+            frontier = blk["seeds"]
+            for layer in blk["layers"]:
+                src = np.array([remap[n] for n in layer["src_nodes"]])
+                dst = np.array([remap[n] for n in frontier[layer["dst_pos"]]])
+                srcs.append(src); dsts.append(dst); masks.append(layer["mask"])
+                frontier = layer["src_nodes"]
+            graph = {
+                "x": jnp.asarray(g["x"][nodes]),
+                "edge_index": jnp.asarray(np.stack([np.concatenate(srcs),
+                                                    np.concatenate(dsts)])).astype(jnp.int32),
+                "edge_mask": jnp.asarray(np.concatenate(masks)),
+                "y": jnp.asarray(g["y"][nodes]),
+            }
+
+    model = GatedGCN(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    loss, grads = jax.value_and_grad(model.loss)(params, graph)
+    assert _finite(loss)
+    assert all(_finite(gr) for gr in jax.tree_util.tree_leaves(grads))
+
+
+def test_registry_covers_40_cells():
+    cs = registry.cells()
+    assert len(cs) == 40
+    assert len({a for a, _ in cs}) == 10

@@ -1,0 +1,217 @@
+"""Training substrate: optimizer semantics, loop restart determinism,
+checkpoint atomicity/resharding, compression, straggler watchdog."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.interest import InterestConfig
+from repro.data.pipeline import DeterministicStream
+from repro.data.synthetic import SyntheticCTRConfig, generate_batch
+from repro.models.ctr import CTRModel, CTRConfig
+from repro.train import checkpoint as ck
+from repro.train.compression import (dequantize_int8, ef_compress,
+                                     init_error_feedback, quantize_int8)
+from repro.train.loop import LoopConfig, Watchdog, make_train_step, run
+from repro.train.optimizer import (OptimizerConfig, apply_updates,
+                                   clip_by_global_norm, decay_mask,
+                                   init_opt_state, schedule_fn, trainable_mask)
+
+
+def _tiny_model():
+    dcfg = SyntheticCTRConfig(hist_len=32, n_items=500, n_cats=20)
+    cfg = CTRConfig(arch="din", n_items=500, n_cats=20, long_len=32,
+                    short_len=8, mlp_hidden=(16, 8),
+                    interest=InterestConfig(kind="sdim", m=8, tau=2))
+    model = CTRModel(cfg)
+    return model, dcfg
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+def test_adamw_moves_params_and_skips_buffers():
+    model, dcfg = _tiny_model()
+    params = model.init(jax.random.PRNGKey(0))
+    batch = {k: jnp.asarray(v) for k, v in generate_batch(dcfg, 8, 0).items()}
+    grads = jax.grad(lambda p: model.loss(p, batch)[0])(params)
+    opt = OptimizerConfig(kind="adamw", lr=1e-2, weight_decay=0.1)
+    state = init_opt_state(params, opt)
+    new_params, new_state, metrics = apply_updates(params, grads, state, opt)
+    # buffers (hash matrices) frozen
+    assert jnp.array_equal(new_params["interest"]["buffers"]["R"],
+                           params["interest"]["buffers"]["R"])
+    # trainable weights moved
+    assert not jnp.array_equal(new_params["head"]["fc0"]["w"], params["head"]["fc0"]["w"])
+    assert int(new_state["count"]) == 1
+    assert "grad_norm" in metrics
+
+
+@pytest.mark.parametrize("kind", ["adamw", "adagrad", "sgd"])
+def test_optimizer_kinds_decrease_loss(kind):
+    model, dcfg = _tiny_model()
+    params = model.init(jax.random.PRNGKey(0))
+    opt = OptimizerConfig(kind=kind, lr=5e-3)
+    state = init_opt_state(params, opt)
+    batch = {k: jnp.asarray(v) for k, v in generate_batch(dcfg, 64, 0).items()}
+    loss_fn = lambda p: model.loss(p, batch)[0]
+    l0 = float(loss_fn(params))
+    for _ in range(20):
+        grads = jax.grad(loss_fn)(params)
+        params, state, _ = apply_updates(params, grads, state, opt)
+    assert float(loss_fn(params)) < l0
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0), "b": jnp.full((4,), -10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    from repro.train.optimizer import global_norm
+    assert abs(float(global_norm(clipped)) - 1.0) < 1e-5
+    assert float(norm) > 1.0
+
+
+def test_schedules_warmup_and_decay():
+    cfg = OptimizerConfig(lr=1.0, schedule="warmup_cosine", warmup_steps=10,
+                          total_steps=100, min_lr_frac=0.1)
+    f = schedule_fn(cfg)
+    assert float(f(jnp.int32(0))) < 0.2
+    assert abs(float(f(jnp.int32(10))) - 1.0) < 0.01
+    assert float(f(jnp.int32(99))) < 0.2
+
+
+def test_masks():
+    model, _ = _tiny_model()
+    params = model.init(jax.random.PRNGKey(0))
+    tm = trainable_mask(params)
+    assert tm["interest"]["buffers"]["R"] is False
+    assert tm["head"]["fc0"]["w"] is True
+    dm = decay_mask(params)
+    assert dm["head"]["fc0"]["w"] is True
+    assert dm["head"]["fc0"]["b"] is False
+
+
+# ---------------------------------------------------------------------------
+# checkpointing + restart
+# ---------------------------------------------------------------------------
+def test_checkpoint_roundtrip_and_atomicity():
+    model, _ = _tiny_model()
+    params = model.init(jax.random.PRNGKey(0))
+    with tempfile.TemporaryDirectory() as d:
+        ck.save(d, 7, {"params": params})
+        assert ck.latest_step(d) == 7
+        restored, step = ck.restore(d, {"params": params})
+        assert step == 7
+        for a, b in zip(jax.tree_util.tree_leaves(params),
+                        jax.tree_util.tree_leaves(restored["params"])):
+            np.testing.assert_array_equal(a, b)
+        # no stray tmp files (atomic rename)
+        assert not [f for f in os.listdir(d) if f.startswith(".tmp")]
+
+
+def test_checkpoint_shape_mismatch_rejected():
+    model, _ = _tiny_model()
+    params = model.init(jax.random.PRNGKey(0))
+    with tempfile.TemporaryDirectory() as d:
+        ck.save(d, 1, {"params": params})
+        bad = jax.tree_util.tree_map(lambda x: jnp.zeros((3, 3)), params)
+        with pytest.raises((ValueError, KeyError)):
+            ck.restore(d, {"params": bad})
+
+
+def test_async_checkpointer_gc():
+    model, _ = _tiny_model()
+    params = model.init(jax.random.PRNGKey(0))
+    with tempfile.TemporaryDirectory() as d:
+        saver = ck.AsyncCheckpointer(d, keep=2)
+        for s in [1, 2, 3, 4]:
+            saver.save(s, {"params": params})
+        saver.wait()
+        steps = sorted(int(f[5:-4]) for f in os.listdir(d) if f.endswith(".npz"))
+        assert steps == [3, 4]
+
+
+def test_restart_resumes_bit_identical():
+    model, dcfg = _tiny_model()
+    params = model.init(jax.random.PRNGKey(0))
+    loss_fn = lambda p, b: model.loss(p, b)[0]
+    opt = OptimizerConfig(kind="adamw", lr=1e-3)
+    make = lambda seed: generate_batch(dcfg, 16, seed)
+    with tempfile.TemporaryDirectory() as d:
+        cfg = LoopConfig(n_steps=8, log_every=100, ckpt_every=4, ckpt_dir=d,
+                         donate=False)
+        out1 = run(loss_fn, params, DeterministicStream(make, 3), opt, cfg)
+        # drop the final checkpoint -> restart from step 4 and re-run to 8
+        for f in os.listdir(d):
+            if "0000000008" in f:
+                os.remove(os.path.join(d, f))
+        out2 = run(loss_fn, params, DeterministicStream(make, 3), opt, cfg)
+        p1 = jax.tree_util.tree_leaves(out1["state"]["params"])
+        p2 = jax.tree_util.tree_leaves(out2["state"]["params"])
+        assert max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(p1, p2)) == 0.0
+
+
+def test_preemption_saves_and_stops():
+    import threading
+
+    model, dcfg = _tiny_model()
+    params = model.init(jax.random.PRNGKey(0))
+    loss_fn = lambda p, b: model.loss(p, b)[0]
+    ev = threading.Event()
+    ev.set()  # preempt immediately after the first step
+    with tempfile.TemporaryDirectory() as d:
+        out = run(loss_fn, params,
+                  DeterministicStream(lambda s: generate_batch(dcfg, 8, s), 0),
+                  OptimizerConfig(), LoopConfig(n_steps=100, ckpt_dir=d, donate=False),
+                  preempt_event=ev)
+        assert out["stopped_at"] == 1
+        assert ck.latest_step(d) == 1
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+def test_int8_quant_bounded_error():
+    x = jax.random.normal(jax.random.PRNGKey(0), (128,))
+    q, s = quantize_int8(x)
+    assert q.dtype == jnp.int8
+    assert float(jnp.max(jnp.abs(dequantize_int8(q, s) - x))) <= float(s) + 1e-6
+
+
+def test_error_feedback_preserves_signal():
+    """Sum of compressed grads + final residual == sum of raw grads."""
+    g = {"w": jax.random.normal(jax.random.PRNGKey(0), (64,))}
+    ef = init_error_feedback(g)
+    total_comp = jnp.zeros((64,))
+    for i in range(10):
+        comp, ef = ef_compress(g, ef, "int8")
+        total_comp = total_comp + comp["w"]
+    total_raw = 10 * g["w"]
+    # residual bounded -> running sums track
+    np.testing.assert_allclose(total_comp + ef["w"], total_raw, rtol=1e-4, atol=1e-4)
+
+
+def test_grad_accum_matches_full_batch():
+    model, dcfg = _tiny_model()
+    params = model.init(jax.random.PRNGKey(0))
+    loss_fn = lambda p, b: model.loss(p, b)[0]
+    opt = OptimizerConfig(kind="sgd", lr=1e-2, momentum=0.0, clip_norm=None)
+    batch = {k: jnp.asarray(v) for k, v in generate_batch(dcfg, 32, 0).items()}
+    i1, s1 = make_train_step(loss_fn, opt, grad_accum=1, donate=False)
+    i4, s4 = make_train_step(loss_fn, opt, grad_accum=4, donate=False)
+    st1, _ = s1(i1(params), batch)
+    st4, _ = s4(i4(params), batch)
+    for a, b in zip(jax.tree_util.tree_leaves(st1["params"]),
+                    jax.tree_util.tree_leaves(st4["params"])):
+        np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-5)
+
+
+def test_watchdog_flags_stragglers():
+    w = Watchdog(factor=3.0)
+    for i in range(10):
+        w.observe(i, 0.1)
+    assert w.observe(10, 1.0) is True
+    assert 10 in w.flags
+    assert w.observe(11, 0.11) is False
