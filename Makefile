@@ -1,0 +1,13 @@
+# Single CI entry point: `make test` is the tier-1 gate, `make bench-smoke`
+# exercises the engine-backend serving benchmark (both backends side by side).
+PYTHONPATH := src
+
+.PHONY: test bench-smoke ci
+
+test:
+	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
+
+bench-smoke:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --only table5
+
+ci: test bench-smoke

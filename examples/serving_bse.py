@@ -30,17 +30,22 @@ def main():
     p.add_argument("--T", type=int, default=2000, help="behavior history length")
     p.add_argument("--users", type=int, default=4)
     p.add_argument("--requests", type=int, default=8)
+    p.add_argument("--backend", default="auto", choices=("auto", "xla", "pallas"),
+                   help="SDIM engine backend (auto: Pallas on TPU)")
     args = p.parse_args()
 
     dcfg = SyntheticCTRConfig(hist_len=args.T, n_items=10000, n_cats=100)
     cfg = CTRConfig(arch="din", n_items=10000, n_cats=100, long_len=args.T,
                     short_len=50, mlp_hidden=(256, 128),
-                    interest=InterestConfig(kind="sdim", m=48, tau=3))
+                    interest=InterestConfig(kind="sdim", m=48, tau=3,
+                                            backend=args.backend))
     model = CTRModel(cfg)
     params = model.init(jax.random.PRNGKey(0))
+    print(f"SDIM engine backend: {model.engine.backend}")
 
     embed = lambda p_, i, c: model._embed_behaviors(p_, jnp.asarray(i), jnp.asarray(c))
-    bse = BSEServer(embed, params, params["interest"]["buffers"]["R"], tau=3)
+    bse = BSEServer(embed, params, model.engine,
+                    R=params["interest"]["buffers"]["R"])
     ctr = CTRServer(model, params, bse, mode="decoupled")
     inline = CTRServer(model, params, mode="inline")
 
@@ -65,9 +70,10 @@ def main():
         s2 = inline.handle_request(u, users[u], ci, cc, ctx)
         top = int(jnp.argmax(s1))
         if u not in has_events:
-            # before live events fold in, decoupled == inline bit-for-bit;
-            # afterwards the BSE table is FRESHER than the static history
-            assert float(jnp.max(jnp.abs(s1 - s2))) < 1e-4
+            # before live events fold in, decoupled == inline up to the bf16
+            # wire quantization of the fetched table; afterwards the BSE
+            # table is FRESHER than the static history
+            assert float(jnp.max(jnp.abs(s1 - s2))) < 0.1
         # real-time event: user clicks the top item -> fold into the table
         bse.ingest_event(u, int(ci[top]), int(cc[top]))
         has_events.add(u)

@@ -1,4 +1,5 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
-from repro.core import bse, interest, retrieval, sdim, simhash, target_attention  # noqa: F401
+from repro.core import (bse, engine, interest, retrieval, sdim, simhash,  # noqa: F401
+                        target_attention)

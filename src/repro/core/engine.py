@@ -1,0 +1,210 @@
+"""SDIMEngine — the single backend-dispatching SDIM compute layer.
+
+Every consumer of SDIM compute in this repo (the ``InterestModule`` inside
+CTR models, the BSE/CTR servers, the serving launcher, and the table-5
+benchmark) reaches hash → bucket → gather through this one object, so a
+config flag flips the whole stack between the reference XLA formulation and
+the fused Pallas kernels.
+
+Paper-equation map per backend
+------------------------------
+
+================  =====================================================
+operation         what it computes (paper §3.3 / §4)
+================  =====================================================
+``encode``        Eq. 8/11: SimHash signatures of every behavior, then
+                  the per-group signature-bucket sums T[g,u] = Σ 1[sig=u]·s
+                  (the BSE table, §4.4). ``xla``: ``simhash.signatures`` +
+                  ``sdim.bucket_table`` (one-hot einsum). ``pallas``: the
+                  fused ``sdim_bucket`` kernel — projection, sign/pack and
+                  bucket scatter in one VMEM pass, the L×m code matrix
+                  never reaches HBM.
+``query``         Eq. 9/11/12: hash the candidate, read its own bucket in
+                  every group, ℓ2-normalize, mean over groups. ``xla``:
+                  ``sdim.fused_query`` (single flat matmul). ``pallas``:
+                  the ``sdim_query`` kernel (same trick on the MXU).
+``attend``        Eq. 12 end-to-end: ``query(q, encode(seq, mask))`` — the
+                  estimator Attn(q; S) used in the training graph.
+``serve``         §4.4 online path: C candidates vs one user in a single
+                  call. ``xla``: encode + query composed under one jit.
+                  ``pallas``: the fused ``sdim_serve`` kernel, where the
+                  bucket table lives only in VMEM scratch (never
+                  materialized in HBM).
+================  =====================================================
+
+Backends: ``xla`` | ``pallas`` | ``auto`` (Pallas on TPU, XLA elsewhere).
+On non-TPU hosts an explicit ``backend="pallas"`` runs the kernels in
+interpret mode (bit-close to XLA, atol ≲1e-5) so the kernel path is
+testable anywhere.
+
+Hash families: ``dense`` (plain GEMM SimHash, paper-faithful) | ``srht``
+(subsampled randomized Hadamard transform, the paper's "Approximating
+Random Projection" citation). The SRHT family is densified once at
+construction (``SRHTHashes.dense_matrix``) so both backends consume the
+same (m, d) projection operand and agree bit-for-bit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sdim, simhash
+
+BACKENDS = ("auto", "xla", "pallas")
+FAMILIES = ("dense", "srht")
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    m: int = 48               # hash functions (paper: 48 online)
+    tau: int = 3              # signature width (paper: 3 online)
+    d: int = 128              # behavior embedding dim
+    family: str = "dense"     # "dense" | "srht"
+    backend: str = "auto"     # "auto" | "xla" | "pallas"
+    hash_seed: int = 1234
+    block_l: int = 128        # Pallas L-tile
+    block_c: int = 128        # Pallas C-tile
+    interpret: Optional[bool] = None  # None: interpret iff not on TPU
+
+    @property
+    def n_groups(self) -> int:
+        assert self.m % self.tau == 0, (self.m, self.tau)
+        return self.m // self.tau
+
+    @property
+    def n_buckets(self) -> int:
+        return 1 << self.tau
+
+
+def resolve_backend(backend: str) -> str:
+    assert backend in BACKENDS, backend
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    return backend
+
+
+def make_hash_family(cfg: EngineConfig) -> jax.Array:
+    """The (m, d) projection operand for ``cfg.family``, from ``hash_seed``."""
+    key = jax.random.PRNGKey(cfg.hash_seed)
+    if cfg.family == "dense":
+        return simhash.make_hashes(key, cfg.m, cfg.d)
+    if cfg.family == "srht":
+        return simhash.srht_hashes(key, cfg.m, cfg.d).dense_matrix()
+    raise ValueError(f"unknown hash family: {cfg.family}")
+
+
+# ---------------------------------------------------------------------------
+# jitted dispatch bodies (module-level so jax.jit caches across engines)
+# ---------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("tau", "backend", "block_l", "interpret"))
+def _encode(seq, mask, R, *, tau, backend, block_l, interpret):
+    if backend == "xla":
+        sig = simhash.signatures(seq, R, tau)
+        return sdim.bucket_table(seq, sig, mask, 1 << tau)
+    from repro.kernels.sdim_bucket.sdim_bucket import bse_encode
+
+    if mask is None:
+        mask = jnp.ones(seq.shape[:2], seq.dtype)
+    return bse_encode(seq, mask, R, tau, block_l=block_l, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("tau", "backend", "block_c", "interpret"))
+def _query(q, table, R, *, tau, backend, block_c, interpret):
+    if backend == "xla":
+        sig_q = simhash.signatures(q, R, tau)
+        return sdim.fused_query(table, sig_q)
+    from repro.kernels.sdim_query.sdim_query import sdim_query
+
+    single = q.ndim == 2
+    qc = q[:, None, :] if single else q
+    out = sdim_query(qc, table, R, tau, block_c=block_c, interpret=interpret)
+    return out[:, 0] if single else out
+
+
+@partial(jax.jit, static_argnames=("tau", "backend", "block_l", "interpret"))
+def _serve(q, seq, mask, R, *, tau, backend, block_l, interpret):
+    if backend == "xla":
+        return sdim.sdim_attention(
+            q.astype(jnp.float32), seq.astype(jnp.float32), mask, R, tau
+        )
+    from repro.kernels.sdim_serve.sdim_serve import bse_serve
+
+    if mask is None:
+        mask = jnp.ones(seq.shape[:2], seq.dtype)
+    return bse_serve(q, seq, mask, R, tau, block_l=block_l, interpret=interpret)
+
+
+class SDIMEngine:
+    """Owns the hash family and dispatches encode/query/attend/serve.
+
+    ``R`` may be overridden per call (the CTR models keep it in the params
+    tree as a checkpointed buffer); when omitted the engine's own family —
+    created from ``cfg.hash_seed`` — is used, so standalone servers need no
+    params plumbing.
+    """
+
+    def __init__(self, cfg: EngineConfig, R: Optional[jax.Array] = None):
+        assert cfg.family in FAMILIES, cfg.family
+        cfg.n_groups  # fail fast on m % tau != 0 (not at first call)
+        self.cfg = cfg
+        self.backend = resolve_backend(cfg.backend)
+        self.R = make_hash_family(cfg) if R is None else R
+        assert self.R.shape == (cfg.m, cfg.d), (self.R.shape, cfg)
+
+    @property
+    def interpret(self) -> bool:
+        if self.cfg.interpret is not None:
+            return self.cfg.interpret
+        return jax.default_backend() != "tpu"
+
+    def _R(self, R: Optional[jax.Array]) -> jax.Array:
+        return self.R if R is None else R
+
+    # ------------------------------------------------------------------
+    def encode(self, seq: jax.Array, mask: Optional[jax.Array] = None,
+               R: Optional[jax.Array] = None) -> jax.Array:
+        """Behaviors (B, L, d) [+ mask (B, L)] -> bucket table (B, G, U, d)."""
+        return _encode(seq, mask, self._R(R), tau=self.cfg.tau,
+                       backend=self.backend, block_l=self.cfg.block_l,
+                       interpret=self.interpret)
+
+    def query(self, q: jax.Array, table: jax.Array,
+              R: Optional[jax.Array] = None) -> jax.Array:
+        """Candidates (B, d)/(B, C, d) x table (B, G, U, d) -> interest with
+        q's leading shape + (d,)."""
+        return _query(q, table, self._R(R), tau=self.cfg.tau,
+                      backend=self.backend, block_c=self.cfg.block_c,
+                      interpret=self.interpret)
+
+    def attend(self, q: jax.Array, seq: jax.Array,
+               mask: Optional[jax.Array] = None,
+               R: Optional[jax.Array] = None) -> jax.Array:
+        """End-to-end SDIM attention (training graph): query ∘ encode."""
+        table = self.encode(seq, mask, R)
+        return self.query(q, table, R).astype(seq.dtype)
+
+    def serve(self, q: jax.Array, seq: jax.Array,
+              mask: Optional[jax.Array] = None,
+              R: Optional[jax.Array] = None) -> jax.Array:
+        """Fused §4.4 serving path: (B, C, d) candidates vs (B, L, d)
+        history in ONE call — on Pallas the bucket table never leaves VMEM."""
+        return _serve(q, seq, mask, self._R(R), tau=self.cfg.tau,
+                      backend=self.backend, block_l=self.cfg.block_l,
+                      interpret=self.interpret).astype(seq.dtype)
+
+
+def engine_from_interest(icfg, d: Optional[int] = None) -> SDIMEngine:
+    """Build an engine from an ``InterestConfig``-shaped object (m, tau, d,
+    hash_seed and, when present, backend/family/use_pallas)."""
+    backend = getattr(icfg, "backend", "auto")
+    if getattr(icfg, "use_pallas", False):
+        backend = "pallas"
+    return SDIMEngine(EngineConfig(
+        m=icfg.m, tau=icfg.tau, d=icfg.d if d is None else d,
+        family=getattr(icfg, "family", "dense"), backend=backend,
+        hash_seed=icfg.hash_seed,
+    ))

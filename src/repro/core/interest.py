@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import retrieval, sdim, simhash
+from repro.core.engine import engine_from_interest
 from repro.core.target_attention import DinActivationUnit, target_attention
 
 
@@ -29,12 +30,16 @@ class InterestConfig:
     tau: int = 3
     top_k: int = 32           # for retrieval baselines
     hash_seed: int = 1234
-    use_pallas: bool = False  # route SDIM through the fused Pallas kernels
+    backend: str = "auto"     # SDIM compute backend: "auto" | "xla" | "pallas"
+    family: str = "dense"     # hash family: "dense" | "srht"
+    use_pallas: bool = False  # deprecated alias for backend="pallas"
 
 
 class InterestModule:
     def __init__(self, cfg: InterestConfig):
         self.cfg = cfg
+        if cfg.kind == "sdim":
+            self.engine = engine_from_interest(cfg)
         if cfg.kind in ("din_mlp",):
             self._din = DinActivationUnit(cfg.d)
         if cfg.kind in ("ubr4ctr",):
@@ -45,7 +50,9 @@ class InterestModule:
     def init(self, key) -> Any:
         cfg = self.cfg
         p: dict[str, Any] = {}
-        if cfg.kind in ("sdim", "eta"):
+        if cfg.kind == "sdim":
+            p["buffers"] = {"R": self.engine.R}
+        elif cfg.kind == "eta":
             p["buffers"] = {
                 "R": simhash.make_hashes(jax.random.PRNGKey(cfg.hash_seed), cfg.m, cfg.d)
             }
@@ -70,11 +77,7 @@ class InterestModule:
             shape = (*q.shape[:-1], seq.shape[-1])
             return jnp.zeros(shape, seq.dtype)
         if kind == "sdim":
-            if cfg.use_pallas:
-                from repro.kernels.sdim_bucket import ops as kops
-
-                return kops.sdim_attention(q, seq, mask, params["buffers"]["R"], cfg.tau)
-            return sdim.sdim_attention(q, seq, mask, params["buffers"]["R"], cfg.tau)
+            return self.engine.attend(q, seq, mask, R=params["buffers"]["R"])
         if kind == "sdim_expected":
             return sdim.sdim_expected_attention(q, seq, mask, cfg.tau)
         if kind == "target":

@@ -107,7 +107,8 @@ class SRHTHashes:
     d: int
     d_pad: int
 
-    def codes(self, x: jax.Array) -> jax.Array:
+    def project(self, x: jax.Array) -> jax.Array:
+        """x (..., d) -> pre-sign projections (..., m) via two FWHT rounds."""
         pad = self.d_pad - self.d
         xf = x.astype(jnp.float32)
         if pad:
@@ -116,8 +117,19 @@ class SRHTHashes:
             )
         y = fwht(xf * self.d1)
         y = fwht(y * self.d2)
-        proj = jnp.take(y, self.rows, axis=-1)
-        return (proj >= 0).astype(jnp.int32)
+        return jnp.take(y, self.rows, axis=-1)
+
+    def codes(self, x: jax.Array) -> jax.Array:
+        return (self.project(x) >= 0).astype(jnp.int32)
+
+    def dense_matrix(self) -> jax.Array:
+        """The (m, d) matrix R with R @ x == project(x) for all x.
+
+        S·H·D2·H·D1 is linear, so applying it to I_d recovers the dense
+        equivalent. Lets the SRHT family feed kernels that take a dense
+        projection operand (same hash family; the O(m·log d) FWHT chain stays
+        the fast host-side formulation)."""
+        return self.project(jnp.eye(self.d, dtype=jnp.float32)).T
 
 
 def srht_hashes(key: jax.Array, m: int, d: int) -> SRHTHashes:

@@ -23,6 +23,71 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+def pad_axis(x: jax.Array, axis: int, target: int) -> jax.Array:
+    """Zero-pad ``x`` along ``axis`` up to length ``target`` (no-op if equal)."""
+    pad = target - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def padded_blocks(n: int, block: int, multiple: int = 8) -> tuple[int, int]:
+    """(block, padded_n): shrink ``block`` to a sublane-aligned size covering
+    small ``n``, then round ``n`` up to a whole number of blocks. Callers
+    zero-pad to ``padded_n`` instead of asserting ``n % block == 0``."""
+    block = min(block, -(-n // multiple) * multiple)
+    return block, -(-n // block) * block
+
+
+def signature_onehot(x: jax.Array, r: jax.Array, *, tau: int, groups: int) -> jax.Array:
+    """In-kernel SimHash: rows x (N, d) -> flat bucket one-hots (N, G·U).
+
+    GEMM projection, sign bits, τ-bit packing, then one 1 per group — the
+    shared front half of the encode / query / serve kernels."""
+    proj = jax.lax.dot_general(
+        x, r, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                        # (N, m)
+    bits = (proj >= 0.0).astype(jnp.int32)
+    N = bits.shape[0]
+    grouped = bits.reshape(N, groups, tau)
+    weights = (1 << jax.lax.broadcasted_iota(jnp.int32, (1, 1, tau), 2))
+    sig = jnp.sum(grouped * weights, axis=-1)                # (N, G)
+    U = 1 << tau
+    u_iota = jax.lax.broadcasted_iota(jnp.int32, (N, groups, U), 2)
+    onehot = (sig[:, :, None] == u_iota).astype(jnp.float32)  # (N, G, U)
+    return onehot.reshape(N, groups * U)
+
+
+def encode_tile(s: jax.Array, valid: jax.Array, r: jax.Array,
+                *, tau: int, groups: int) -> jax.Array:
+    """One L-tile's bucket contribution: (TL, d) x (TL,) mask -> (G·U, d)."""
+    onehot = signature_onehot(s, r, tau=tau, groups=groups)
+    onehot = onehot * valid[:, None].astype(jnp.float32)
+    return jax.lax.dot_general(
+        onehot, s, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+def query_tile(q: jax.Array, tnorm: jax.Array, r: jax.Array,
+               *, tau: int, groups: int) -> jax.Array:
+    """One C-tile's interest read: (TC, d) x ℓ2-normalized table (G·U, d) ->
+    (TC, d). The one-hot GEMM gathers each group's bucket AND sums over
+    groups in a single MXU contraction (Eq. 12's mean, times G)."""
+    onehot = signature_onehot(q, r, tau=tau, groups=groups)
+    gathered = jax.lax.dot_general(
+        onehot, tnorm, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    return gathered / groups
+
+
+def l2_normalize_rows(t: jax.Array) -> jax.Array:
+    norm = jnp.sqrt(jnp.sum(t * t, axis=-1, keepdims=True) + 1e-12)
+    return t / norm
+
+
 def _encode_kernel(seq_ref, mask_ref, r_ref, table_ref, *, tau: int, groups: int):
     li = pl.program_id(1)
 
@@ -32,23 +97,7 @@ def _encode_kernel(seq_ref, mask_ref, r_ref, table_ref, *, tau: int, groups: int
 
     s = seq_ref[0].astype(jnp.float32)                       # (TL, d)
     r = r_ref[...].astype(jnp.float32)                       # (m, d)
-    proj = jax.lax.dot_general(
-        s, r, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-    )                                                        # (TL, m)
-    bits = (proj >= 0.0).astype(jnp.int32)
-    TL = bits.shape[0]
-    grouped = bits.reshape(TL, groups, tau)
-    weights = (1 << jax.lax.broadcasted_iota(jnp.int32, (1, 1, tau), 2))
-    sig = jnp.sum(grouped * weights, axis=-1)                # (TL, G)
-    U = 1 << tau
-    u_iota = jax.lax.broadcasted_iota(jnp.int32, (TL, groups, U), 2)
-    onehot = (sig[:, :, None] == u_iota).astype(jnp.float32)  # (TL, G, U)
-    onehot = onehot * mask_ref[0][:, None, None].astype(jnp.float32)
-    onehot2d = onehot.reshape(TL, groups * U)
-    contrib = jax.lax.dot_general(
-        onehot2d, s, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
-    )                                                        # (G·U, d)
-    table_ref[0] += contrib
+    table_ref[0] += encode_tile(s, mask_ref[0], r, tau=tau, groups=groups)
 
 
 def bse_encode(
@@ -65,12 +114,15 @@ def bse_encode(
     m = R.shape[0]
     assert m % tau == 0
     G, U = m // tau, 1 << tau
-    block_l = min(block_l, L)
-    assert L % block_l == 0, (L, block_l)
+    # ragged L: pad to a whole number of blocks; padded rows carry mask=0 so
+    # they scatter nothing into the table
+    block_l, L_pad = padded_blocks(L, block_l)
+    seq = pad_axis(seq, 1, L_pad)
+    mask = pad_axis(mask, 1, L_pad)
 
     out = pl.pallas_call(
         functools.partial(_encode_kernel, tau=tau, groups=G),
-        grid=(B, L // block_l),
+        grid=(B, L_pad // block_l),
         in_specs=[
             pl.BlockSpec((1, block_l, d), lambda b, l: (b, l, 0)),
             pl.BlockSpec((1, block_l), lambda b, l: (b, l)),

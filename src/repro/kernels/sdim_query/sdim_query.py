@@ -20,34 +20,20 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.sdim_bucket.sdim_bucket import (
+    l2_normalize_rows, pad_axis, padded_blocks, query_tile)
+
 
 def _query_kernel(q_ref, table_ref, r_ref, out_ref, tnorm_ref, *, tau: int, groups: int):
     ci = pl.program_id(1)
 
     @pl.when(ci == 0)
     def _normalize_table():
-        t = table_ref[0].astype(jnp.float32)                 # (G·U, d)
-        norm = jnp.sqrt(jnp.sum(t * t, axis=-1, keepdims=True) + 1e-12)
-        tnorm_ref[...] = t / norm
+        tnorm_ref[...] = l2_normalize_rows(table_ref[0].astype(jnp.float32))
 
     q = q_ref[0].astype(jnp.float32)                         # (TC, d)
     r = r_ref[...].astype(jnp.float32)                       # (m, d)
-    proj = jax.lax.dot_general(
-        q, r, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-    )
-    bits = (proj >= 0.0).astype(jnp.int32)
-    TC = bits.shape[0]
-    grouped = bits.reshape(TC, groups, tau)
-    weights = (1 << jax.lax.broadcasted_iota(jnp.int32, (1, 1, tau), 2))
-    sig = jnp.sum(grouped * weights, axis=-1)                # (TC, G)
-    U = 1 << tau
-    u_iota = jax.lax.broadcasted_iota(jnp.int32, (TC, groups, U), 2)
-    onehot = (sig[:, :, None] == u_iota).astype(jnp.float32).reshape(TC, groups * U)
-    gathered = jax.lax.dot_general(
-        onehot, tnorm_ref[...], (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    )                                                        # (TC, d) = Σ_g ℓ2(bucket)
-    out_ref[0] = gathered / groups
+    out_ref[0] = query_tile(q, tnorm_ref[...], r, tau=tau, groups=groups)
 
 
 def sdim_query(
@@ -64,20 +50,23 @@ def sdim_query(
     _, G, U, _ = table.shape
     m = R.shape[0]
     assert G == m // tau and U == 1 << tau
-    block_c = min(block_c, C)
-    assert C % block_c == 0, (C, block_c)
+    # ragged C: pad candidates to a whole number of blocks (padded rows are
+    # computed on zeros and sliced off below)
+    block_c, C_pad = padded_blocks(C, block_c)
+    q = pad_axis(q, 1, C_pad)
     table2d = table.reshape(B, G * U, d)
 
-    return pl.pallas_call(
+    out = pl.pallas_call(
         functools.partial(_query_kernel, tau=tau, groups=G),
-        grid=(B, C // block_c),
+        grid=(B, C_pad // block_c),
         in_specs=[
             pl.BlockSpec((1, block_c, d), lambda b, c: (b, c, 0)),
             pl.BlockSpec((1, G * U, d), lambda b, c: (b, 0, 0)),
             pl.BlockSpec((m, d), lambda b, c: (0, 0)),
         ],
         out_specs=pl.BlockSpec((1, block_c, d), lambda b, c: (b, c, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, C, d), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((B, C_pad, d), jnp.float32),
         scratch_shapes=[pltpu.VMEM((G * U, d), jnp.float32)],
         interpret=interpret,
     )(q, table2d, R)
+    return out[:, :C]

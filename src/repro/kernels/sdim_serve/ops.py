@@ -1,0 +1,13 @@
+"""Jitted public wrapper for the fused BSE-serve kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.sdim_serve.sdim_serve import bse_serve
+
+
+@partial(jax.jit, static_argnames=("tau", "block_l", "interpret"))
+def serve(q, seq, mask, R, tau: int, block_l: int = 128, interpret: bool = False):
+    return bse_serve(q, seq, mask, R, tau, block_l=block_l, interpret=interpret)

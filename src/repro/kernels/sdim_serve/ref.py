@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the fused BSE-serve kernel: encode then query."""
+from __future__ import annotations
+
+import jax
+
+from repro.core import sdim
+
+
+def bse_serve_ref(q: jax.Array, seq: jax.Array, mask: jax.Array,
+                  R: jax.Array, tau: int) -> jax.Array:
+    """(B, C, d), (B, L, d), (B, L) -> (B, C, d) fp32."""
+    return sdim.sdim_attention(
+        q.astype(jax.numpy.float32), seq.astype(jax.numpy.float32), mask, R, tau
+    )

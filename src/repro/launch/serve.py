@@ -6,12 +6,14 @@ deployment); LM archs -> decode loop (exact KV or --sdim-kv compressed).
 from __future__ import annotations
 
 import argparse
+import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import registry
+from repro.core.engine import BACKENDS
 
 
 def main():
@@ -19,6 +21,8 @@ def main():
     p.add_argument("--arch", required=True, choices=registry.ARCH_IDS)
     p.add_argument("--requests", type=int, default=4)
     p.add_argument("--candidates", type=int, default=128)
+    p.add_argument("--backend", default="auto", choices=BACKENDS,
+                   help="SDIM compute backend (auto: Pallas on TPU, XLA elsewhere)")
     p.add_argument("--tokens", type=int, default=32, help="LM decode steps")
     p.add_argument("--sdim-kv", action="store_true",
                    help="LM: SDIM bucket-compressed KV decode")
@@ -32,6 +36,9 @@ def main():
         from repro.serve.bse_server import BSEServer
         from repro.serve.ctr_server import CTRServer
 
+        if cfg.interest.kind == "sdim":
+            cfg = dataclasses.replace(
+                cfg, interest=dataclasses.replace(cfg.interest, backend=args.backend))
         model = CTRModel(cfg)
         params = model.init(jax.random.PRNGKey(0))
         mode = "decoupled" if cfg.interest.kind == "sdim" else "inline"
@@ -39,9 +46,12 @@ def main():
         if mode == "decoupled":
             embed = lambda p_, i, c: model._embed_behaviors(
                 p_, jnp.asarray(i), jnp.asarray(c))
-            bse = BSEServer(embed, params, params["interest"]["buffers"]["R"],
-                            cfg.interest.tau)
+            bse = BSEServer(embed, params, model.engine,
+                            R=params["interest"]["buffers"]["R"])
         server = CTRServer(model, params, bse, mode=mode)
+        if cfg.interest.kind == "sdim":
+            print(f"SDIM engine backend: {model.engine.backend}"
+                  f"{' (interpret)' if model.engine.backend == 'pallas' and model.engine.interpret else ''}")
         dcfg = SyntheticCTRConfig(hist_len=cfg.long_len, n_items=cfg.n_items,
                                   n_cats=cfg.n_cats)
         rng = np.random.default_rng(0)

@@ -268,18 +268,20 @@ class CTRModel:
         return jnp.mean(ll), logits
 
     # ---------------- serving ----------------
+    @property
+    def engine(self):
+        """The SDIM compute engine (backend dispatch lives there)."""
+        assert self.cfg.interest.kind == "sdim"
+        return self.interest.engine
+
     def encode_bse_table(self, params, user_batch):
         """BSE-server step: embed the user's long history and encode it into
         the (G, U, d) bucket table — everything candidate-independent."""
-        from repro.core import bse
-
-        assert self.cfg.interest.kind == "sdim"
         long_e = self._embed_behaviors(
             params, user_batch["hist_items"], user_batch["hist_cats"]
         )                                                       # (1, L, e)
         R = params["interest"]["buffers"]["R"]
-        return bse.encode_sequence(long_e, user_batch["hist_mask"], R,
-                                   self.cfg.interest.tau)       # (1, G, U, e)
+        return self.engine.encode(long_e, user_batch["hist_mask"], R=R)  # (1, G, U, e)
 
     def score_candidates(self, params, user_batch, cand_items, cand_cats, ctx,
                          sparse_ids=None, bucket_table=None):
@@ -308,13 +310,21 @@ class CTRModel:
 
         if cfg.interest.kind != "none":
             if bucket_table is not None:
-                from repro.core import bse
-
                 assert cfg.interest.kind == "sdim"
                 R = params["interest"]["buffers"]["R"]
-                long_out = bse.query_interest(
-                    bucket_table, target_e[None], R, cfg.interest.tau
+                long_out = self.engine.query(
+                    target_e[None], bucket_table, R=R
                 )[0].astype(target_e.dtype)                                # (C, e)
+            elif cfg.interest.kind == "sdim":
+                # inline §4.4 path: C candidates vs one user through the
+                # engine's fused serve entry (table never re-materialized)
+                long_e = self._embed_behaviors(
+                    params, user_batch["hist_items"], user_batch["hist_cats"]
+                )                                                          # (1, L, e)
+                R = params["interest"]["buffers"]["R"]
+                long_out = self.engine.serve(
+                    target_e[None], long_e, user_batch["hist_mask"], R=R
+                )[0]                                                       # (C, e)
             else:
                 long_e = self._embed_behaviors(
                     params, user_batch["hist_items"], user_batch["hist_cats"]

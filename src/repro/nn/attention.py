@@ -394,9 +394,11 @@ class MLAttention:
 # ---------------------------------------------------------------------------
 def _combined_axis_index(axes):
     """Linear shard index over a tuple of mesh axes (row-major)."""
+    from repro.distributed.compat import axis_size
+
     idx = jax.lax.axis_index(axes[0])
     for a in axes[1:]:
-        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        idx = idx * axis_size(a) + jax.lax.axis_index(a)
     return idx
 
 

@@ -9,6 +9,11 @@ Two deployments, matching the paper's ablation:
     Seq.) deployment the paper could not keep online).
 
 ``ServeStats`` records wall-clock per stage for benchmarks/table5.
+
+All SDIM compute (decoupled bucket reads AND the inline hash path) reaches
+the kernels through the model's ``SDIMEngine``, so the server inherits the
+engine's backend (``xla`` reference vs fused ``pallas`` kernels) from the
+model config with no server-side branching.
 """
 from __future__ import annotations
 

@@ -26,8 +26,8 @@ def run_sub(code: str) -> str:
 PREAMBLE = """
 import jax, jax.numpy as jnp, numpy as np, json
 from jax.sharding import PartitionSpec as P, NamedSharding
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.distributed.compat import make_auto_mesh
+mesh = make_auto_mesh((2, 4), ("data", "model"))
 """
 
 
@@ -133,8 +133,7 @@ rules = lambda path, shape: valid_for_mesh(param_spec("recsys", path, shape), sh
 with tempfile.TemporaryDirectory() as d:
     ck.save(d, 3, {"params": p})
     r1, s1 = restore_on_mesh(d, {"params": p}, mesh, rules)
-    mesh2 = jax.make_mesh((4, 2), ("data", "model"),
-                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh2 = make_auto_mesh((4, 2), ("data", "model"))
     rules2 = lambda path, shape: valid_for_mesh(param_spec("recsys", path, shape), shape, mesh2)
     r2, s2 = restore_on_mesh(d, {"params": p}, mesh2, rules2)
 ok = all(bool(jnp.all(a == b)) for a, b in zip(

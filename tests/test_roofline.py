@@ -37,7 +37,8 @@ def test_cost_analysis_is_per_partition():
     code = """
 import jax, jax.numpy as jnp, json
 from jax.sharding import PartitionSpec as P, NamedSharding
-mesh = jax.make_mesh((4,), ("d",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.distributed.compat import make_auto_mesh
+mesh = make_auto_mesh((4,), ("d",))
 N = 512
 x = jax.ShapeDtypeStruct((N, N), jnp.float32, sharding=NamedSharding(mesh, P("d", None)))
 w = jax.ShapeDtypeStruct((N, N), jnp.float32, sharding=NamedSharding(mesh, P(None, None)))
