@@ -1,11 +1,20 @@
 # Single CI entry point: `make test` is the tier-1 gate, `make bench-smoke`
 # exercises the engine-backend serving benchmark (both backends side by side).
+# `test-fast` skips the slow property/parity suites (no hypothesis needed);
+# `test-full` runs everything, including the hypothesis property tests and
+# interpret-mode kernel parity (hypothesis optional — see requirements-dev).
 PYTHONPATH := src
 
-.PHONY: test bench-smoke ci
+.PHONY: test test-fast test-full bench-smoke ci
 
 test:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
+
+test-fast:
+	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q -m "not slow"
+
+test-full:
+	PYTHONPATH=$(PYTHONPATH) python -m pytest -q
 
 bench-smoke:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --only table5

@@ -9,8 +9,17 @@ transmission size. Every SDIM deployment goes through the ``SDIMEngine``
 and is measured on BOTH backends side by side — ``xla`` (reference
 formulation) and ``pallas`` (fused kernels; interpret mode off-TPU) — so
 the serving benchmark finally measures the kernel path.
+
+The **throughput** section measures the multi-user TableStore path: N users
+served per ``handle_requests`` burst (one ``fetch_many`` gather + one
+scoring dispatch) vs the per-user ``handle_request`` loop, and batched
+``ingest_events`` vs the per-event loop — users/sec and events/sec on both
+backends (the per-dispatch overhead the per-user loop pays N times is
+exactly what §4.4's "millions of users" deployment cannot afford).
 """
 from __future__ import annotations
+
+import time
 
 import jax
 import jax.numpy as jnp
@@ -76,4 +85,97 @@ def run(quick: bool = True):
     rows.append({"name": "table5/transmission_bytes", "us_per_call": 0.0,
                  "derived": f"{servers['decoupled[xla]'].bse.table_bytes()}"
                             "B_fixed_(L-free,bf16_wire)"})
+    rows.extend(throughput_rows(quick))
+    return rows
+
+
+def throughput_rows(quick: bool = True, n_users: int = 1024,
+                    chunk: int = 256) -> list[dict]:
+    """Multi-user TableStore throughput: batched fetch_many+serve vs the
+    per-user loop at N users, and batched vs per-event ingest."""
+    L, C = 256, 8
+    rows = []
+    for backend in ("xla", "pallas"):
+        # interpret-mode Pallas on CPU is a python-loop simulator; keep its
+        # user count bounded in quick mode (the 5x claim is XLA@N=1024)
+        n = n_users if backend == "xla" or not quick else 128
+        ch = min(chunk, n)
+        loop_n = min(n, 128 if backend == "xla" else 16)
+        dcfg = SyntheticCTRConfig(hist_len=L, n_items=4000, n_cats=50)
+        cfg = CTRConfig(arch="din", n_items=4000, n_cats=50, long_len=L,
+                        short_len=8, mlp_hidden=(32,), embed_dim=16,
+                        interest=InterestConfig(kind="sdim", m=24, tau=3,
+                                                backend=backend))
+        model = CTRModel(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        embed = lambda p, i, c, _m=model: _m._embed_behaviors(
+            p, jnp.asarray(i), jnp.asarray(c))
+        bse = BSEServer(embed, params, model.engine,
+                        R=params["interest"]["buffers"]["R"], capacity=n)
+        ctr = CTRServer(model, params, bse, mode="decoupled")
+        rng = np.random.default_rng(0)
+        raw = generate_batch(dcfg, n, 0)
+        hists = {k: v for k, v in raw.items() if k.startswith("hist")}
+        for lo in range(0, n, ch):                         # batched bootstrap
+            hi = min(lo + ch, n)
+            sl = slice(lo, hi)
+            bse.ingest_histories(
+                list(range(lo, hi)), raw["hist_items"][sl],
+                raw["hist_cats"][sl], raw["hist_mask"][sl])
+        ci = rng.integers(0, 4000, (n, C)).astype(np.int32)
+        cc = rng.integers(0, 50, (n, C)).astype(np.int32)
+        zctx = np.zeros((C, 4), np.float32)
+
+        # requests carry HOST arrays (they arrive from the network in
+        # production); both paths pay the same device upload
+        def request(u):
+            return (u, {k: v[u][None] for k, v in hists.items()},
+                    ci[u], cc[u], zctx)
+
+        reqs = [request(u) for u in range(n)]
+        ctr.handle_request(*reqs[0])                       # warm per-user jit
+        ctr.handle_requests(reqs[:ch])                     # warm batched jit
+        if n % ch:
+            ctr.handle_requests(reqs[-(n % ch):])          # warm tail shape
+        t0 = time.perf_counter()
+        for r in reqs[:loop_n]:
+            ctr.handle_request(*r)
+        loop_ups = loop_n / (time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        for lo in range(0, n, ch):
+            ctr.handle_requests(reqs[lo:lo + ch])
+        batch_ups = n / (time.perf_counter() - t0)
+
+        ev_i = rng.integers(0, 4000, n)
+        ev_c = rng.integers(0, 50, n)
+        bse.ingest_event(0, int(ev_i[0]), int(ev_c[0]))    # warm both paths
+        bse.ingest_events(list(range(ch)), ev_i[:ch], ev_c[:ch])
+        if n % ch:                                         # warm tail shape
+            bse.ingest_events(list(range(n % ch)),
+                              ev_i[:n % ch], ev_c[:n % ch])
+        # ingest is async (no fetch forces completion) — sync before reading
+        # timers so events/sec measures compute, not dispatch
+        bse.store.data.block_until_ready()
+        t0 = time.perf_counter()
+        for u in range(loop_n):
+            bse.ingest_event(u, int(ev_i[u]), int(ev_c[u]))
+        bse.store.data.block_until_ready()
+        loop_eps = loop_n / (time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        for lo in range(0, n, ch):
+            hi = min(lo + ch, n)
+            bse.ingest_events(list(range(lo, hi)),
+                              ev_i[lo:hi], ev_c[lo:hi])
+        bse.store.data.block_until_ready()
+        batch_eps = n / (time.perf_counter() - t0)
+
+        tag = f"throughput[{backend}]"
+        rows.append({"name": f"table5/{tag}/users_per_sec",
+                     "us_per_call": 1e6 / batch_ups,
+                     "derived": f"batched={batch_ups:.0f}/s_loop={loop_ups:.0f}/s"
+                                f"_speedup={batch_ups / loop_ups:.1f}x_N={n}"})
+        rows.append({"name": f"table5/{tag}/events_per_sec",
+                     "us_per_call": 1e6 / batch_eps,
+                     "derived": f"batched={batch_eps:.0f}/s_loop={loop_eps:.0f}/s"
+                                f"_speedup={batch_eps / loop_eps:.1f}x_N={n}"})
     return rows

@@ -30,6 +30,14 @@ operation         what it computes (paper §3.3 / §4)
                   ``pallas``: the fused ``sdim_serve`` kernel, where the
                   bucket table lives only in VMEM scratch (never
                   materialized in HBM).
+``update``        §4.4 real-time ingest at multi-user scale: scatter-add a
+                  batch of event-behavior deltas into selected rows of a
+                  contiguous (N, G, U, d) table store. ``xla``: bucket the
+                  events, then one O(B)-row scatter-add (the segment_sum
+                  oracle lives in ``kernels/sdim_update/ref.py``).
+                  ``pallas``: the fused ``sdim_update`` kernel — hash,
+                  bucket and slot gather in one VMEM pass (scalar-prefetch
+                  block index map over the slots).
 ================  =====================================================
 
 Backends: ``xla`` | ``pallas`` | ``auto`` (Pallas on TPU, XLA elsewhere).
@@ -125,6 +133,31 @@ def _query(q, table, R, *, tau, backend, block_c, interpret):
     return out[:, 0] if single else out
 
 
+def _update_impl(store, slots, events, mask, R, *, tau, backend, block_l,
+                 interpret):
+    if mask is None:
+        mask = jnp.ones(events.shape[:2], events.dtype)
+    if backend == "xla":
+        sig = simhash.signatures(events, R, tau)
+        deltas = sdim.bucket_table(events, sig, mask, 1 << tau)  # (B, G, U, d)
+        # scatter-add (duplicate slots accumulate): touches O(B) rows, unlike
+        # the segment_sum oracle in kernels/sdim_update/ref.py which builds a
+        # store-sized dense intermediate — O(N) per call
+        return store.astype(jnp.float32).at[slots].add(deltas)
+    from repro.kernels.sdim_update.sdim_update import sdim_update
+
+    return sdim_update(store, slots, events, mask, R, tau,
+                       block_e=block_l, interpret=interpret)
+
+
+_STATIC_UPDATE = ("tau", "backend", "block_l", "interpret")
+_update = jax.jit(_update_impl, static_argnames=_STATIC_UPDATE)
+# owners that immediately replace their store reference (BSEServer) donate it,
+# so XLA updates the (N, G, U, d) buffer in place instead of copying it
+_update_donated = jax.jit(_update_impl, static_argnames=_STATIC_UPDATE,
+                          donate_argnums=(0,))
+
+
 @partial(jax.jit, static_argnames=("tau", "backend", "block_l", "interpret"))
 def _serve(q, seq, mask, R, *, tau, backend, block_l, interpret):
     if backend == "xla":
@@ -196,15 +229,36 @@ class SDIMEngine:
                       backend=self.backend, block_l=self.cfg.block_l,
                       interpret=self.interpret).astype(seq.dtype)
 
+    def update(self, store: jax.Array, slots, events: jax.Array,
+               mask: Optional[jax.Array] = None,
+               R: Optional[jax.Array] = None, *,
+               donate: bool = False) -> jax.Array:
+        """Batched real-time ingest: fold events (B, E, d) [+ mask (B, E)]
+        into rows ``slots`` (B,) of the table store (N, G, U, d) — one
+        dispatch for the whole batch; duplicate slots accumulate. Returns
+        the updated store (fp32; the bucket table is a sum, Eq. 8).
+        ``donate=True`` hands the store buffer to XLA for in-place update —
+        only safe when the caller drops its reference (INVALIDATES it)."""
+        fn = _update_donated if donate else _update
+        return fn(store, jnp.asarray(slots, jnp.int32), events, mask,
+                  self._R(R), tau=self.cfg.tau, backend=self.backend,
+                  block_l=self.cfg.block_l, interpret=self.interpret)
+
 
 def engine_from_interest(icfg, d: Optional[int] = None) -> SDIMEngine:
     """Build an engine from an ``InterestConfig``-shaped object (m, tau, d,
-    hash_seed and, when present, backend/family/use_pallas)."""
+    hash_seed and, when present, backend/family/use_pallas plus the kernel
+    knobs block_l/block_c/interpret — all threaded through, so an interest
+    config can pin tile sizes or force interpret mode end to end)."""
     backend = getattr(icfg, "backend", "auto")
     if getattr(icfg, "use_pallas", False):
         backend = "pallas"
+    defaults = EngineConfig()
     return SDIMEngine(EngineConfig(
         m=icfg.m, tau=icfg.tau, d=icfg.d if d is None else d,
         family=getattr(icfg, "family", "dense"), backend=backend,
         hash_seed=icfg.hash_seed,
+        block_l=getattr(icfg, "block_l", defaults.block_l),
+        block_c=getattr(icfg, "block_c", defaults.block_c),
+        interpret=getattr(icfg, "interpret", defaults.interpret),
     ))

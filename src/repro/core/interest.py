@@ -33,6 +33,9 @@ class InterestConfig:
     backend: str = "auto"     # SDIM compute backend: "auto" | "xla" | "pallas"
     family: str = "dense"     # hash family: "dense" | "srht"
     use_pallas: bool = False  # deprecated alias for backend="pallas"
+    block_l: int = 128        # Pallas L-tile (threaded into EngineConfig)
+    block_c: int = 128        # Pallas C-tile
+    interpret: Optional[bool] = None  # None: interpret iff not on TPU
 
 
 class InterestModule:

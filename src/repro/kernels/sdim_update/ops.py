@@ -1,0 +1,24 @@
+"""Jitted public wrapper for the fused BSE-update kernel.
+
+``update`` is the drop-in for the XLA segment-sum formulation
+(``ref.sdim_update_ref``) routed through the Pallas scatter kernel
+(CPU: interpret mode; TPU: compiled).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.sdim_update.sdim_update import sdim_update
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@partial(jax.jit, static_argnames=("tau", "interpret"))
+def update(store, slots, events, mask, R, tau: int,
+           interpret: bool | None = None):
+    interp = _on_cpu() if interpret is None else interpret
+    return sdim_update(store, slots, events, mask, R, tau, interpret=interp)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the fused BSE-update kernel (segment-sum form).
+
+The batched ingest is, mathematically, a segmented reduction: every event
+batch row contributes its bucket-delta to the slot it targets, and duplicate
+slots accumulate. ``jax.ops.segment_sum`` over the slot vector IS that
+reduction, so this reference is both the parity oracle for the Pallas kernel
+and the XLA formulation of ``SDIMEngine.update``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sdim_bucket.ref import bse_encode_ref
+
+
+def sdim_update_ref(store: jax.Array, slots: jax.Array, events: jax.Array,
+                    mask: jax.Array, R: jax.Array, tau: int) -> jax.Array:
+    """(N, G, U, d), (B,), (B, E, d), (B, E), (m, d) -> updated store fp32."""
+    deltas = bse_encode_ref(events, mask, R, tau)            # (B, G, U, d)
+    agg = jax.ops.segment_sum(deltas, slots.astype(jnp.int32),
+                              num_segments=store.shape[0])
+    return store.astype(jnp.float32) + agg

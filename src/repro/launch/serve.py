@@ -23,6 +23,9 @@ def main():
     p.add_argument("--candidates", type=int, default=128)
     p.add_argument("--backend", default="auto", choices=BACKENDS,
                    help="SDIM compute backend (auto: Pallas on TPU, XLA elsewhere)")
+    p.add_argument("--micro-batch", type=int, default=1,
+                   help="serve requests in bursts of this size: one "
+                        "fetch_many + one scoring dispatch per burst")
     p.add_argument("--tokens", type=int, default=32, help="LM decode steps")
     p.add_argument("--sdim-kv", action="store_true",
                    help="LM: SDIM bucket-compressed KV decode")
@@ -55,6 +58,15 @@ def main():
         dcfg = SyntheticCTRConfig(hist_len=cfg.long_len, n_items=cfg.n_items,
                                   n_cats=cfg.n_cats)
         rng = np.random.default_rng(0)
+        pending = []  # micro-batch buffer of (req_id, request tuple)
+
+        def flush():
+            for (r, _), scores in zip(pending,
+                                      server.handle_requests([q for _, q in pending])):
+                print(f"req {r}: top candidate {int(jnp.argmax(scores))} "
+                      f"(score {float(jnp.max(scores)):+.3f})")
+            pending.clear()
+
         for r in range(args.requests):
             raw = generate_batch(dcfg, 1, r)
             user = {k: jnp.asarray(v) for k, v in raw.items() if k.startswith("hist")}
@@ -70,11 +82,19 @@ def main():
                     "hist_mask": jnp.broadcast_to(user["hist_mask"], (args.candidates, cfg.long_len)),
                     "cand_item": ci, "cand_cat": cc,
                     "ctx": jnp.zeros((args.candidates, cfg.ctx_dim)), **kw})
+            elif args.micro_batch > 1:
+                pending.append((r, (f"u{r}", user, ci, cc,
+                                    jnp.zeros((args.candidates, cfg.ctx_dim)))))
+                if len(pending) == args.micro_batch:
+                    flush()
+                continue
             else:
                 scores = server.handle_request(f"u{r}", user, ci, cc,
                                                jnp.zeros((args.candidates, cfg.ctx_dim)))
             print(f"req {r}: top candidate {int(jnp.argmax(scores))} "
                   f"(score {float(jnp.max(scores)):+.3f})")
+        if pending:
+            flush()
         if bse:
             print(f"{server.stats.ms_per_request:.1f} ms/request; "
                   f"table {bse.table_bytes()} B")

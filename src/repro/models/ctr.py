@@ -293,66 +293,94 @@ class CTRModel:
         n_sparse) supplies wide_deep's candidate-filled field ids.
         ``bucket_table`` (1, G, U, e): if given (the decoupled-BSE deployment),
         the long branch reads buckets directly and the raw long history is
-        never touched — the paper's latency-free path."""
-        cfg = self.cfg
-        C = cand_items.shape[0]
-        target_e = self._embed_behaviors(params, cand_items, cand_cats)   # (C, e)
+        never touched — the paper's latency-free path.
 
+        This is the B=1 case of ``score_candidates_many``, so the per-request
+        and micro-batched deployments cannot drift apart."""
+        return self.score_candidates_many(
+            params, user_batch, cand_items[None], cand_cats[None], ctx[None],
+            sparse_ids=None if sparse_ids is None else sparse_ids[None],
+            bucket_tables=bucket_table,
+        )[0]
+
+    def score_candidates_many(self, params, user_batch, cand_items, cand_cats,
+                              ctx, sparse_ids=None, bucket_tables=None):
+        """A micro-batch of B requests in ONE dispatch — row i of the output
+        is ``score_candidates`` of request i.
+
+        user_batch: dict with hist_* of shape (B, L); cand_*: (B, C); ctx:
+        (B, C, ctx_dim). ``bucket_tables`` (B, G, U, e) is the decoupled-BSE
+        deployment (one ``TableStore`` gather feeds all B long branches);
+        without it the sdim path runs ONE batched ``engine.serve`` over the
+        padded (B, C, d) candidate block. ``sparse_ids`` (B, C, n_sparse)
+        supplies wide_deep's fields. Returns (B, C) logits."""
+        cfg = self.cfg
+        B, C = cand_items.shape
+        e = cfg.behavior_dim
+        target_e = self._embed_behaviors(params, cand_items, cand_cats)  # (B, C, e)
+        tflat = target_e.reshape(B * C, e)
+
+        def per_pair(x):  # (B, ...) user-side -> (B*C, ...) request pairs
+            return jnp.reshape(
+                jnp.broadcast_to(x[:, None], (B, C, *x.shape[1:])),
+                (B * C, *x.shape[1:]))
+
+        # the pair view only feeds the short-term branch (``_short_slice``
+        # keeps the recent window), so broadcast just that window instead of
+        # materializing (B·C, L) copies of the full history
+        s = cfg.short_len
         pair = {
-            "hist_items": jnp.broadcast_to(user_batch["hist_items"], (C, cfg.long_len)),
-            "hist_cats": jnp.broadcast_to(user_batch["hist_cats"], (C, cfg.long_len)),
-            "hist_mask": jnp.broadcast_to(user_batch["hist_mask"], (C, cfg.long_len)),
-            "cand_item": cand_items,
-            "cand_cat": cand_cats,
-            "ctx": ctx,
+            "hist_items": per_pair(user_batch["hist_items"][:, -s:]),
+            "hist_cats": per_pair(user_batch["hist_cats"][:, -s:]),
+            "hist_mask": per_pair(user_batch["hist_mask"][:, -s:]),
+            "cand_item": cand_items.reshape(B * C),
+            "cand_cat": cand_cats.reshape(B * C),
+            "ctx": ctx.reshape(B * C, -1),
         }
-        feats = [target_e, self._short_rep(params, pair, target_e)]
+        feats = [tflat, self._short_rep(params, pair, tflat)]
 
         if cfg.interest.kind != "none":
-            if bucket_table is not None:
+            if bucket_tables is not None:
                 assert cfg.interest.kind == "sdim"
                 R = params["interest"]["buffers"]["R"]
-                long_out = self.engine.query(
-                    target_e[None], bucket_table, R=R
-                )[0].astype(target_e.dtype)                                # (C, e)
+                long_out = self.engine.query(target_e, bucket_tables, R=R)
             elif cfg.interest.kind == "sdim":
-                # inline §4.4 path: C candidates vs one user through the
-                # engine's fused serve entry (table never re-materialized)
                 long_e = self._embed_behaviors(
                     params, user_batch["hist_items"], user_batch["hist_cats"]
-                )                                                          # (1, L, e)
+                )                                                  # (B, L, e)
                 R = params["interest"]["buffers"]["R"]
                 long_out = self.engine.serve(
-                    target_e[None], long_e, user_batch["hist_mask"], R=R
-                )[0]                                                       # (C, e)
+                    target_e, long_e, user_batch["hist_mask"], R=R)
             else:
                 long_e = self._embed_behaviors(
                     params, user_batch["hist_items"], user_batch["hist_cats"]
-                )                                                          # (1, L, e)
+                )
                 long_out = self.interest.apply(
-                    params["interest"], target_e[None], long_e,
+                    params["interest"], target_e, long_e,
                     user_batch["hist_mask"],
-                    seq_cat=user_batch["hist_cats"], q_cat=cand_cats[None],
-                )[0]                                                       # (C, e)
-            feats.append(long_out)
+                    seq_cat=user_batch["hist_cats"], q_cat=cand_cats,
+                )                                                  # (B, C, e)
+            feats.append(long_out.reshape(B * C, e).astype(tflat.dtype))
 
         wide = None
         if cfg.arch == "wide_deep":
-            assert sparse_ids is not None, "wide_deep serving needs sparse_ids (C, n_sparse)"
+            assert sparse_ids is not None, \
+                "wide_deep serving needs sparse_ids (B, C, n_sparse)"
+            sids = sparse_ids.reshape(B * C, cfg.n_sparse)
             field_e = [
-                jnp.take(params["field_tables"][f"f{i}"], sparse_ids[:, i], axis=0)
+                jnp.take(params["field_tables"][f"f{i}"], sids[:, i], axis=0)
                 for i in range(cfg.n_sparse)
             ]
             feats = [jnp.concatenate(field_e, axis=-1)] + feats[1:]
             wide = sum(
-                jnp.take(params["wide"][f"f{i}"], sparse_ids[:, i], axis=0)
+                jnp.take(params["wide"][f"f{i}"], sids[:, i], axis=0)
                 for i in range(cfg.n_sparse)
             ) + params["wide_bias"]
 
-        feats.append(ctx.astype(target_e.dtype))
+        feats.append(pair["ctx"].astype(tflat.dtype))
         out = MLP(self._head_in_dim(), [*cfg.mlp_hidden, 1], "relu").apply(
             params["head"], jnp.concatenate(feats, axis=-1)
         )[..., 0]
         if wide is not None:
             out = out + wide[..., 0]
-        return out
+        return out.reshape(B, C)

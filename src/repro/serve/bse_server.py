@@ -4,15 +4,19 @@ from the CTR server.
 Responsibilities modeled faithfully:
   * maintain per-user bucket tables (the FULL serving state: (G, U, d),
     L-free — "no matter how long the user's behavior is, we only need to
-    transmit fixed-length vectors");
+    transmit fixed-length vectors") in a contiguous multi-user
+    ``TableStore`` — one (N, G, U, d) device array + user→slot index with
+    amortized-doubling growth and slot recycling on eviction;
   * ingest real-time behavior events incrementally (O(m·d) per event, no
-    re-encode of history);
+    re-encode of history) — and *batched*: ``ingest_events`` folds B events
+    for B (possibly repeated) users in ONE ``SDIMEngine.update`` dispatch,
+    ``ingest_histories`` encodes B full histories in ONE encode dispatch;
   * answer CTR-server fetches, accounting transmission bytes (the paper's
-    8KB / ~1ms budget). The wire dtype is explicit: tables are encoded and
-    stored fp32 but CAST to ``wire_dtype`` (default bf16, the paper's 8KB
-    figure) on fetch, so the byte accounting matches the array actually
-    transmitted — and the CTR server really scores with wire-precision
-    buckets.
+    8KB / ~1ms budget). ``fetch_many`` serves N users per gather. The wire
+    dtype is explicit: tables are stored fp32 but CAST to ``wire_dtype``
+    (default bf16, the paper's 8KB figure) on fetch, so the byte accounting
+    matches the array actually transmitted — and the CTR server really
+    scores with wire-precision buckets.
 
 All SDIM compute goes through an ``SDIMEngine``, so the server follows the
 engine's backend (XLA reference vs fused Pallas kernels) without any
@@ -20,19 +24,21 @@ server-side branching.
 
 The embedding of raw behavior ids depends on the CTR model's current tables,
 so the server holds an ``embed_fn`` + params snapshot; ``refresh_params``
-models the model-push cycle after each training deployment.
+models the model-push cycle after each training deployment (the whole store
+is invalidated — index emptied, array zeroed — and re-encoded lazily).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.engine import SDIMEngine
+from repro.serve.table_store import TableStore
 
 
 @dataclasses.dataclass
@@ -44,6 +50,32 @@ class BSEStats:
     encode_time_s: float = 0.0
 
 
+class _TablesView:
+    """Read-only dict-like view over the store, keyed by user (back-compat
+    with the old per-user ``dict[user, table]`` surface)."""
+
+    def __init__(self, store: TableStore):
+        self._store = store
+
+    def __getitem__(self, user: Any) -> jax.Array:
+        row = self._store.row(user)
+        if row is None:
+            raise KeyError(user)
+        return row
+
+    def __contains__(self, user: Any) -> bool:
+        return user in self._store
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def __iter__(self):
+        return self._store.users()
+
+    def values(self):
+        return (self[u] for u in self._store.users())
+
+
 class BSEServer:
     def __init__(
         self,
@@ -52,47 +84,89 @@ class BSEServer:
         engine: SDIMEngine,
         R: Optional[jax.Array] = None,
         wire_dtype: Any = jnp.bfloat16,
+        capacity: int = 64,
     ):
         self.embed_fn = embed_fn
         self.params = params
         self.engine = engine
         self.R = engine.R if R is None else R
         self.wire_dtype = jnp.dtype(wire_dtype)
-        self.tables: dict[Any, jax.Array] = {}
+        cfg = engine.cfg
+        self.store = TableStore(cfg.n_groups, cfg.n_buckets, cfg.d,
+                                capacity=capacity)
+        self.tables = _TablesView(self.store)
         self.stats = BSEStats()
 
     def refresh_params(self, params: Any) -> None:
-        """Model push: new embeddings invalidate all tables (re-encoded lazily)."""
+        """Model push: new embeddings invalidate the whole store (re-encoded
+        lazily; the slot index is emptied so no stale slot can be read)."""
         self.params = params
-        self.tables.clear()
+        self.store.clear()
 
+    # ------------------------------------------------------------------
+    # ingest
+    # ------------------------------------------------------------------
     def ingest_history(self, user: Any, items: np.ndarray, cats: np.ndarray,
                        mask: Optional[np.ndarray] = None) -> None:
         """Full (re-)encode of a user's history."""
+        self.ingest_histories(
+            [user], np.asarray(items)[None], np.asarray(cats)[None],
+            None if mask is None else np.asarray(mask)[None])
+
+    def ingest_histories(self, users: Sequence[Any], items: np.ndarray,
+                         cats: np.ndarray,
+                         masks: Optional[np.ndarray] = None) -> None:
+        """Batched full (re-)encode: B distinct users' histories (B, L) in
+        ONE ``engine.encode`` dispatch, scattered into their slots."""
+        assert len(set(users)) == len(users), "duplicate users in one encode"
         t0 = time.perf_counter()
-        seq_e = self.embed_fn(self.params, items[None], cats[None])     # (1, L, d)
-        m = jnp.asarray(mask[None]) if mask is not None else None
-        table = self.engine.encode(seq_e, m, R=self.R)[0]
-        table.block_until_ready()
+        seq_e = self.embed_fn(self.params, np.asarray(items), np.asarray(cats))
+        m = jnp.asarray(masks) if masks is not None else None
+        tables = self.engine.encode(seq_e, m, R=self.R)       # (B, G, U, d)
+        tables.block_until_ready()
         self.stats.encode_time_s += time.perf_counter() - t0
-        self.stats.n_encodes += 1
-        self.tables[user] = table
+        self.stats.n_encodes += len(users)
+        self.store.write(self.store.assign(users), tables)
 
     def ingest_event(self, user: Any, item: int, cat: int) -> None:
         """Real-time behavior event: incremental O(m·d) table update (the
         bucket table is a sum, so new behaviors just fold in)."""
-        new_e = self.embed_fn(self.params, np.array([[item]]), np.array([[cat]]))
-        delta = self.engine.encode(new_e, None, R=self.R)[0]
-        if user in self.tables:
-            self.tables[user] = self.tables[user] + delta
-        else:
-            self.tables[user] = delta
-        self.stats.n_updates += 1
+        self.ingest_events([user], np.array([item]), np.array([cat]))
 
+    def ingest_events(self, users: Sequence[Any], items: np.ndarray,
+                      cats: np.ndarray,
+                      mask: Optional[np.ndarray] = None) -> None:
+        """Batched real-time events: one event-block per user — items/cats
+        (B,) or (B, E) — folded into the store in ONE ``engine.update``
+        dispatch. Users may repeat (duplicate slots accumulate); unseen
+        users start from a zero table."""
+        items = np.asarray(items)
+        cats = np.asarray(cats)
+        mask = None if mask is None else np.asarray(mask)
+        if items.ndim == 1:
+            items, cats = items[:, None], cats[:, None]
+            mask = None if mask is None else mask[:, None]
+        if mask is not None:
+            assert mask.shape == items.shape, (mask.shape, items.shape)
+        ev_e = self.embed_fn(self.params, items, cats)        # (B, E, d)
+        m = None if mask is None else jnp.asarray(mask)
+        slots = self.store.assign(users)
+        self.store.data = self.engine.update(self.store.data, slots, ev_e, m,
+                                             R=self.R, donate=True)
+        self.stats.n_updates += int(items.size if mask is None
+                                    else np.sum(np.asarray(mask) > 0))
+
+    def evict(self, user: Any) -> bool:
+        """Drop a user's table; its slot is zeroed and recycled."""
+        return self.store.evict(user)
+
+    # ------------------------------------------------------------------
+    # fetch
+    # ------------------------------------------------------------------
     def fetch(self, user: Any) -> Optional[jax.Array]:
         """CTR-server fetch: cast to the wire dtype and account exactly the
         bytes of the array that crosses the wire."""
-        table = self.tables.get(user)
+        table = self.store.row(user)
         if table is None:
             return None
         wire = table.astype(self.wire_dtype)
@@ -100,6 +174,16 @@ class BSEServer:
         self.stats.bytes_transmitted += wire.size * self.wire_dtype.itemsize
         return wire
 
+    def fetch_many(self, users: Sequence[Any]) -> jax.Array:
+        """Batched fetch: ONE gather -> (B, G, U, d) in the wire dtype.
+        Raises KeyError on unknown users (callers ingest first). Bytes are
+        accounted for the array actually returned."""
+        wire = self.store.rows(self.store.slots(users)).astype(self.wire_dtype)
+        self.stats.n_fetches += len(users)
+        self.stats.bytes_transmitted += wire.size * self.wire_dtype.itemsize
+        return wire
+
     def table_bytes(self) -> int:
-        t = next(iter(self.tables.values()), None)
-        return 0 if t is None else t.size * self.wire_dtype.itemsize
+        if len(self.store) == 0:
+            return 0
+        return int(np.prod(self.store.row_shape)) * self.wire_dtype.itemsize

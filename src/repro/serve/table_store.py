@@ -1,0 +1,133 @@
+"""TableStore — contiguous multi-user BSE state (paper §4.4 at scale).
+
+The BSE server's job is to absorb the hashing cost for *millions* of users,
+which a ``dict[user, (G, U, d) array]`` cannot do: every ingest/fetch pays a
+full dispatch for one user. The store instead keeps
+
+  * one contiguous ``(N, G, U, d)`` device array (``data``) — N slots of
+    fixed-size bucket tables, so batched ops (gather N rows, scatter-add N
+    event deltas) are single XLA/Pallas dispatches;
+  * a host-side user → slot index with **amortized-doubling growth** (the
+    device array doubles when the free list empties, so k ingests cost O(k)
+    amortized device copies) and **slot recycling on eviction** (evicted
+    slots are zeroed and pushed to the free list; the next new user reuses
+    them, keeping the array dense).
+
+The store itself is compute-free: callers (``BSEServer``) produce rows via
+``SDIMEngine.encode`` and fold events via ``SDIMEngine.update``; this class
+only owns the memory and the index.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Iterator, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# the store drops its reference the moment the scatter returns, so the buffer
+# is donated: XLA writes the touched rows in place instead of copying N slots
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter_set(data, slots, rows):
+    return data.at[slots].set(rows)
+
+
+class TableStore:
+    def __init__(self, n_groups: int, n_buckets: int, d: int,
+                 capacity: int = 64, dtype: Any = jnp.float32):
+        assert capacity >= 1
+        self.row_shape = (n_groups, n_buckets, d)
+        self.dtype = jnp.dtype(dtype)
+        self.data = jnp.zeros((capacity, *self.row_shape), self.dtype)
+        self._slot_of: dict[Any, int] = {}
+        self._user_of: dict[int, Any] = {}
+        self._free = list(range(capacity - 1, -1, -1))
+        self.n_grows = 0
+        self.n_evictions = 0
+
+    # ------------------------------------------------------------------
+    # index
+    # ------------------------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        return self.data.shape[0]
+
+    def __len__(self) -> int:
+        return len(self._slot_of)
+
+    def __contains__(self, user: Any) -> bool:
+        return user in self._slot_of
+
+    def users(self) -> Iterator[Any]:
+        return iter(self._slot_of)
+
+    def slot(self, user: Any) -> Optional[int]:
+        return self._slot_of.get(user)
+
+    def slots(self, users: Sequence[Any]) -> np.ndarray:
+        """Slots of known users; raises KeyError naming the unknown ones."""
+        missing = [u for u in users if u not in self._slot_of]
+        if missing:
+            raise KeyError(f"users not in table store: {missing}")
+        return np.asarray([self._slot_of[u] for u in users], np.int32)
+
+    def assign(self, users: Sequence[Any]) -> np.ndarray:
+        """Slots for ``users``, allocating for unknown ones (growing the
+        device array by doubling when the free list runs dry). Duplicate
+        users in one call share one slot; fresh slots read all-zero."""
+        need = len({u for u in users if u not in self._slot_of})
+        while len(self._free) < need:
+            self._grow()
+        slots = []
+        for u in users:
+            s = self._slot_of.get(u)
+            if s is None:
+                s = self._free.pop()
+                self._slot_of[u] = s
+                self._user_of[s] = u
+            slots.append(s)
+        return np.asarray(slots, np.int32)
+
+    def _grow(self) -> None:
+        cap = self.capacity
+        self.data = jnp.concatenate([self.data, jnp.zeros_like(self.data)])
+        self._free[:0] = range(2 * cap - 1, cap - 1, -1)
+        self.n_grows += 1
+
+    def evict(self, user: Any) -> bool:
+        """Drop a user; the zeroed slot is recycled by the next allocation."""
+        s = self._slot_of.pop(user, None)
+        if s is None:
+            return False
+        del self._user_of[s]
+        # recycled slots must read zero
+        self.data = _scatter_set(self.data, np.array([s], np.int32),
+                                 jnp.zeros((1, *self.row_shape), self.dtype))
+        self._free.append(s)
+        self.n_evictions += 1
+        return True
+
+    def clear(self) -> None:
+        """Invalidate everything (model push): index emptied, array zeroed."""
+        self._slot_of.clear()
+        self._user_of.clear()
+        self._free = list(range(self.capacity - 1, -1, -1))
+        self.data = jnp.zeros_like(self.data)
+
+    # ------------------------------------------------------------------
+    # rows
+    # ------------------------------------------------------------------
+    def rows(self, slots: Sequence[int]) -> jax.Array:
+        """One gather: (B,) slots -> (B, G, U, d)."""
+        return self.data[jnp.asarray(slots, jnp.int32)]
+
+    def row(self, user: Any) -> Optional[jax.Array]:
+        s = self._slot_of.get(user)
+        return None if s is None else self.data[s]
+
+    def write(self, slots: Sequence[int], rows: jax.Array) -> None:
+        """One scatter: overwrite (B,) slots with rows (B, G, U, d)."""
+        self.data = _scatter_set(self.data, jnp.asarray(slots, jnp.int32),
+                                 rows.astype(self.dtype))

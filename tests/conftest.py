@@ -1,4 +1,42 @@
 import os
 import sys
 
+import pytest
+
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running property/parity suites (run via `make test-full`; "
+        "`make test-fast` deselects them)")
+
+
+# ---------------------------------------------------------------------------
+# Optional hypothesis (see requirements-dev.txt): property-based tests import
+# ``given/settings/st`` from here. Without hypothesis installed the decorated
+# tests turn into clean skips while the deterministic suites still run.
+# ---------------------------------------------------------------------------
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+    def settings(*a, **k):
+        return lambda f: f
+
+    def given(*a, **k):
+        def deco(f):
+            def skipper():
+                pytest.skip("hypothesis not installed")
+            skipper.__name__ = f.__name__
+            return skipper
+        return deco

@@ -97,6 +97,59 @@ def test_single_query_vector_shape():
     np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
 
 
+def test_engine_update_backend_parity_and_oracle():
+    """Batched slot update: xla (segment_sum) == pallas (scatter kernel) ==
+    the kernels' ref, with duplicate unsorted slots and a mask."""
+    from repro.kernels.sdim_update.ref import sdim_update_ref
+
+    N, B, E, d, m, tau = 5, 7, 3, 32, 12, 2
+    ex, ep = _engines(d, m, tau, "dense")
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(5), 3)
+    store = jax.random.normal(k1, (N, m // tau, 1 << tau, d))
+    events = jax.random.normal(k2, (B, E, d))
+    mask = (jax.random.uniform(k3, (B, E)) > 0.4).astype(jnp.float32)
+    slots = jnp.asarray(np.array([3, 0, 3, 1, 4, 3, 0], np.int32))
+    oracle = sdim_update_ref(store, slots, events, mask, ex.R, tau)
+    np.testing.assert_allclose(ex.update(store, slots, events, mask), oracle,
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(ep.update(store, slots, events, mask), oracle,
+                               rtol=1e-5, atol=1e-5)
+    # mask=None means every event is valid
+    np.testing.assert_allclose(
+        ex.update(store, slots, events),
+        ex.update(store, slots, events, jnp.ones((B, E))),
+        rtol=1e-6, atol=1e-6)
+
+
+def test_engine_update_is_incremental_encode():
+    """update on a zero store == encode of the same behaviors (Eq. 8: the
+    table is a sum, so events fold in exactly)."""
+    B, E, d, m, tau = 3, 4, 32, 12, 2
+    ex, _ = _engines(d, m, tau, "dense")
+    events = jax.random.normal(jax.random.PRNGKey(6), (B, E, d))
+    store = jnp.zeros((B, m // tau, 1 << tau, d))
+    out = ex.update(store, jnp.arange(B), events)
+    np.testing.assert_allclose(out, ex.encode(events), rtol=1e-5, atol=1e-6)
+
+
+def test_engine_from_interest_threads_kernel_params():
+    """Regression: block_l/block_c/interpret must survive the
+    InterestConfig -> EngineConfig hop (they used to be dropped)."""
+    from repro.core.engine import engine_from_interest
+    from repro.core.interest import InterestConfig
+
+    icfg = InterestConfig(kind="sdim", m=12, tau=2, d=16, backend="pallas",
+                          block_l=32, block_c=16, interpret=True)
+    eng = engine_from_interest(icfg)
+    assert eng.cfg.block_l == 32
+    assert eng.cfg.block_c == 16
+    assert eng.cfg.interpret is True and eng.interpret is True
+    # defaults still apply for configs that don't carry the knobs
+    eng2 = engine_from_interest(InterestConfig(kind="sdim", m=12, tau=2, d=16))
+    assert eng2.cfg.block_l == EngineConfig().block_l
+    assert eng2.cfg.interpret is None
+
+
 def test_auto_backend_resolves():
     assert resolve_backend("auto") in ("xla", "pallas")
     assert resolve_backend("xla") == "xla"

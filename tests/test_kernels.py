@@ -10,6 +10,8 @@ from repro.kernels.sdim_bucket.sdim_bucket import bse_encode
 from repro.kernels.sdim_bucket.ref import bse_encode_ref
 from repro.kernels.sdim_query.sdim_query import sdim_query
 from repro.kernels.sdim_query.ref import sdim_query_ref
+from repro.kernels.sdim_update.sdim_update import sdim_update
+from repro.kernels.sdim_update.ref import sdim_update_ref
 from repro.kernels.target_attn.target_attn import target_attention_flash
 from repro.kernels.target_attn.ref import target_attention_ref
 
@@ -66,6 +68,53 @@ def test_target_attention_flash_kernel(shape, dtype):
     ref = target_attention_ref(q.astype(jnp.float32), seq.astype(jnp.float32), mask)
     tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
     np.testing.assert_allclose(out, ref, rtol=tol, atol=tol)
+
+
+UPDATE_SHAPES = [
+    # (N, B, E, d, m, tau, block_e) — ragged/non-multiple-of-block on purpose
+    (1, 1, 1, 16, 8, 2, 8),       # N=1, single event (E=1)
+    (3, 4, 7, 32, 12, 2, 8),      # E = block_e - 1
+    (5, 6, 9, 32, 12, 3, 8),      # N odd, E = block_e + 1
+    (4, 8, 16, 16, 24, 4, 8),     # E a multiple of block_e, heavy slot reuse
+]
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("shape", UPDATE_SHAPES)
+def test_sdim_update_kernel(shape, dtype):
+    """Slot-scatter kernel vs segment-sum oracle: unsorted slots with
+    duplicates, ragged event blocks, masked events."""
+    N, B, E, d, m, tau, block_e = shape
+    k1, k2, k3, k4, k5 = jax.random.split(jax.random.PRNGKey(0), 5)
+    G, U = m // tau, 1 << tau
+    store = jax.random.normal(k1, (N, G, U, d))
+    slots = jax.random.randint(k2, (B,), 0, N)             # dups, unsorted
+    events = jax.random.normal(k3, (B, E, d), dtype)
+    mask = (jax.random.uniform(k4, (B, E)) > 0.3).astype(jnp.float32)
+    R = simhash.make_hashes(k5, m, d)
+    out = sdim_update(store, slots, events, mask, R, tau,
+                      block_e=block_e, interpret=True)
+    ref = sdim_update_ref(store, slots, events, mask, R, tau)
+    np.testing.assert_allclose(out, ref,
+                               rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5,
+                               atol=1e-2 if dtype == jnp.bfloat16 else 1e-5)
+
+
+def test_sdim_update_all_rows_one_slot():
+    """Worst-case duplication: every event batch row hits the same slot."""
+    N, B, E, d, m, tau = 3, 7, 2, 16, 12, 2
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(1), 3)
+    store = jax.random.normal(k1, (N, m // tau, 1 << tau, d))
+    events = jax.random.normal(k2, (B, E, d))
+    mask = jnp.ones((B, E))
+    R = simhash.make_hashes(k3, m, d)
+    slots = jnp.full((B,), 1, jnp.int32)
+    out = sdim_update(store, slots, events, mask, R, tau, interpret=True)
+    ref = sdim_update_ref(store, slots, events, mask, R, tau)
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+    # untouched slots are bit-identical
+    np.testing.assert_array_equal(out[0], store[0])
+    np.testing.assert_array_equal(out[2], store[2])
 
 
 def test_flash_ta_fully_masked_rows():

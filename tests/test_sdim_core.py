@@ -1,32 +1,15 @@
 """SDIM core: paper-faithfulness properties (Eq. 8–15, Appendix A) +
 hypothesis property-based tests on the system's invariants.
 
-``hypothesis`` is optional (see requirements-dev.txt): without it the
-property-based tests are skipped and the deterministic ones still run."""
+``hypothesis`` is optional (the shared shim lives in conftest.py): without
+it the property-based tests are skipped and the deterministic ones still
+run."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-try:
-    from hypothesis import given, settings, strategies as st
-except ModuleNotFoundError:
-    class _AnyStrategy:
-        def __getattr__(self, name):
-            return lambda *a, **k: None
-
-    st = _AnyStrategy()
-
-    def settings(*a, **k):
-        return lambda f: f
-
-    def given(*a, **k):
-        def deco(f):
-            def skipper():
-                pytest.skip("hypothesis not installed")
-            skipper.__name__ = f.__name__
-            return skipper
-        return deco
+from conftest import given, settings, st
 
 from repro.core import bse, sdim, simhash
 from repro.core.target_attention import target_attention

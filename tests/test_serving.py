@@ -94,6 +94,36 @@ def test_incremental_event_ingest_matches_batch_encode():
                                rtol=1e-4, atol=1e-4)
 
 
+def test_micro_batched_requests_match_per_request():
+    """handle_requests == handle_request per row, ragged candidate counts,
+    on both decoupled (fetch_many + batched query) and inline (batched
+    serve) deployments — missing users are batch-ingested on the fly."""
+    model, params, user, raw, embed, R = _setup(L=64)
+    bse = BSEServer(embed, params, model.engine, R=R, wire_dtype=jnp.float32,
+                    capacity=2)
+    dec = CTRServer(model, params, bse, mode="decoupled")
+    inl = CTRServer(model, params, mode="inline")
+    rng = np.random.default_rng(1)
+    dcfg = SyntheticCTRConfig(hist_len=64, n_items=1000, n_cats=50)
+    reqs = []
+    for u in range(4):
+        r = generate_batch(dcfg, 1, u)
+        ub = {k: jnp.asarray(v) for k, v in r.items() if k.startswith("hist")}
+        C = (8, 5, 8, 3)[u]
+        reqs.append((u, ub,
+                     jnp.asarray(rng.integers(0, 1000, C).astype(np.int32)),
+                     jnp.asarray(rng.integers(0, 50, C).astype(np.int32)),
+                     jnp.zeros((C, 4))))
+    for server in (dec, inl):
+        batched = server.handle_requests(reqs)
+        assert [len(s) for s in batched] == [8, 5, 8, 3]
+        for r, s in zip(reqs, batched):
+            np.testing.assert_allclose(s, server.handle_request(*r),
+                                       rtol=1e-4, atol=1e-5)
+    assert dec.stats.n_requests == 2 * len(reqs)
+    assert len(bse.tables) == 4           # burst bootstrap encoded every user
+
+
 def test_model_push_invalidates_tables():
     model, params, user, raw, embed, R = _setup()
     bse = BSEServer(embed, params, model.engine, R=R)

@@ -1,0 +1,284 @@
+"""Batched multi-user BSE: TableStore invariants + the equivalence
+properties that make the batched path trustworthy.
+
+The two load-bearing properties (ISSUE 2):
+  * ``ingest_history(u, h)`` ≡ folding ``ingest_event`` over ``h`` one at a
+    time (the bucket table is a sum, Eq. 8);
+  * batched ``ingest_events`` ≡ the per-user ``ingest_event`` loop — exact
+    up to fp32 sum-reordering tolerance — on BOTH backends.
+
+Deterministic seeded versions always run; the hypothesis versions (shared
+optional shim in conftest.py) fuzz shapes/seeds and are marked ``slow``.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import given, settings, st
+
+from repro.core.engine import EngineConfig, SDIMEngine
+from repro.serve.bse_server import BSEServer
+from repro.serve.table_store import TableStore
+
+D = 16
+N_ITEMS, N_CATS = 64, 16
+_EMB_I = jax.random.normal(jax.random.PRNGKey(11), (N_ITEMS, D // 2))
+_EMB_C = jax.random.normal(jax.random.PRNGKey(12), (N_CATS, D // 2))
+
+
+def _embed(params, items, cats):
+    """Tiny deterministic stand-in for the CTR model's behavior embedding."""
+    return jnp.concatenate([_EMB_I[jnp.asarray(items) % N_ITEMS],
+                            _EMB_C[jnp.asarray(cats) % N_CATS]], axis=-1)
+
+
+def _server(backend="xla", m=12, tau=2, capacity=2, wire=jnp.float32):
+    eng = SDIMEngine(EngineConfig(
+        m=m, tau=tau, d=D, backend=backend,
+        interpret=None if backend == "xla" else jax.default_backend() != "tpu"))
+    return BSEServer(_embed, None, eng, wire_dtype=wire, capacity=capacity)
+
+
+BACKENDS = ["xla", "pallas"]
+
+
+# ---------------------------------------------------------------------------
+# TableStore index invariants
+# ---------------------------------------------------------------------------
+def test_store_growth_and_recycle():
+    store = TableStore(3, 4, D, capacity=2)
+    slots = store.assign(["a", "b", "c", "d", "e"])
+    assert store.capacity == 8 and store.n_grows == 2       # 2 -> 4 -> 8
+    assert len(set(map(int, slots))) == 5                   # distinct slots
+    assert list(store.assign(["a", "b"])) == list(slots[:2])  # stable
+    store.write(slots, jnp.ones((5, 3, 4, D)))
+    assert store.evict("c") and not store.evict("c")
+    assert "c" not in store and len(store) == 4
+    # the recycled slot is handed out again — and reads zero
+    s_new = store.assign(["f"])
+    assert int(s_new[0]) == int(slots[2])
+    np.testing.assert_array_equal(store.row("f"), np.zeros((3, 4, D)))
+    # duplicate users in one call share one slot
+    dup = store.assign(["g", "g", "a"])
+    assert int(dup[0]) == int(dup[1]) != int(dup[2])
+
+
+def test_store_clear_resets_index_and_data():
+    store = TableStore(3, 4, D, capacity=4)
+    store.write(store.assign(["a", "b"]), jnp.ones((2, 3, 4, D)))
+    store.clear()
+    assert len(store) == 0 and store.slot("a") is None
+    with pytest.raises(KeyError):
+        store.slots(["a"])
+    assert float(jnp.sum(jnp.abs(store.data))) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# equivalence: batched ↔ per-user (deterministic, both backends)
+# ---------------------------------------------------------------------------
+def _random_events(rng, n):
+    return (rng.integers(0, N_ITEMS, n), rng.integers(0, N_CATS, n))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_history_equals_event_fold(backend):
+    """Full encode of a history == folding it in one event at a time."""
+    rng = np.random.default_rng(0)
+    items, cats = _random_events(rng, 11)
+    a = _server(backend)
+    a.ingest_history("u", items, cats)
+    b = _server(backend)
+    for i, c in zip(items, cats):
+        b.ingest_event("u", int(i), int(c))
+    np.testing.assert_allclose(a.tables["u"], b.tables["u"],
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_batched_events_equal_per_user_loop(backend):
+    """One ingest_events dispatch == the per-event loop (users repeat)."""
+    rng = np.random.default_rng(1)
+    users = [0, 1, 0, 2, 1, 0, 3, 2]
+    items, cats = _random_events(rng, len(users))
+    a = _server(backend)
+    for u, i, c in zip(users, items, cats):
+        a.ingest_event(u, int(i), int(c))
+    b = _server(backend)
+    b.ingest_events(users, items, cats)
+    assert a.stats.n_updates == b.stats.n_updates == len(users)
+    for u in set(users):
+        np.testing.assert_allclose(a.tables[u], b.tables[u],
+                                   rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_batched_events_with_1d_mask(backend):
+    """Regression: a 1-D mask must be reshaped alongside 1-D items/cats
+    (it used to broadcast the batch dim onto the event axis — XLA scaled
+    every delta by B, Pallas crashed)."""
+    rng = np.random.default_rng(7)
+    users = [0, 1, 2]
+    items, cats = _random_events(rng, len(users))
+    a = _server(backend)
+    a.ingest_events(users, items, cats, mask=np.ones(len(users)))
+    b = _server(backend)
+    b.ingest_events(users, items, cats)
+    for u in users:
+        np.testing.assert_allclose(a.tables[u], b.tables[u],
+                                   rtol=1e-6, atol=1e-6)
+    assert a.stats.n_updates == len(users)
+    with pytest.raises(AssertionError):
+        a.ingest_events(users, items, cats, mask=np.ones((len(users), 2)))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_batched_histories_equal_per_user_loop(backend):
+    rng = np.random.default_rng(2)
+    L, B = 9, 4
+    items = rng.integers(0, N_ITEMS, (B, L))
+    cats = rng.integers(0, N_CATS, (B, L))
+    masks = (rng.uniform(size=(B, L)) > 0.3).astype(np.float32)
+    a = _server(backend)
+    for u in range(B):
+        a.ingest_history(u, items[u], cats[u], masks[u])
+    b = _server(backend)
+    b.ingest_histories(list(range(B)), items, cats, masks)
+    for u in range(B):
+        np.testing.assert_allclose(a.tables[u], b.tables[u],
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_events_on_top_of_history_match_across_backends():
+    """history + batched events must agree between xla and pallas."""
+    rng = np.random.default_rng(3)
+    h_i, h_c = _random_events(rng, 10)
+    users = [0, 1, 0, 1, 0]
+    e_i, e_c = _random_events(rng, len(users))
+    tabs = {}
+    for backend in BACKENDS:
+        s = _server(backend)
+        s.ingest_history(0, h_i, h_c)
+        s.ingest_events(users, e_i, e_c)
+        tabs[backend] = {u: np.asarray(s.tables[u]) for u in (0, 1)}
+    for u in (0, 1):
+        np.testing.assert_allclose(tabs["xla"][u], tabs["pallas"][u],
+                                   rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# serving stats: byte accounting + slot-index consistency
+# ---------------------------------------------------------------------------
+def test_fetch_many_matches_fetch_and_byte_accounting():
+    rng = np.random.default_rng(4)
+    srv = _server(wire=jnp.bfloat16)
+    users = list(range(5))
+    for u in users:
+        i, c = _random_events(rng, 7)
+        srv.ingest_history(u, i, c)
+    singles = [srv.fetch(u) for u in users]
+    single_bytes = srv.stats.bytes_transmitted
+    assert single_bytes == sum(s.size * srv.wire_dtype.itemsize
+                               for s in singles)
+    many = srv.fetch_many(users)
+    assert many.dtype == jnp.bfloat16
+    # batched bytes == Σ wire.size * itemsize of the array actually returned
+    assert srv.stats.bytes_transmitted - single_bytes == \
+        many.size * srv.wire_dtype.itemsize == single_bytes
+    assert srv.stats.n_fetches == 2 * len(users)
+    for s, row in zip(singles, many):
+        np.testing.assert_array_equal(np.asarray(s), np.asarray(row))
+    with pytest.raises(KeyError):
+        srv.fetch_many([0, 99])
+
+
+def test_eviction_and_refresh_leave_slot_index_consistent():
+    """No stale-slot reads: a recycled slot must never leak the evicted
+    user's table, and a model push must invalidate everything."""
+    rng = np.random.default_rng(5)
+    srv = _server(capacity=2)
+    h = {u: _random_events(rng, 8) for u in ("u1", "u2", "u3")}
+    srv.ingest_history("u1", *h["u1"])
+    srv.ingest_history("u2", *h["u2"])
+    s1 = srv.store.slot("u1")
+    assert srv.evict("u1") and srv.fetch("u1") is None
+    srv.ingest_history("u3", *h["u3"])                    # recycles u1's slot
+    assert srv.store.slot("u3") == s1
+    ref = _server()
+    ref.ingest_history("u3", *h["u3"])
+    np.testing.assert_allclose(srv.fetch("u3"), ref.fetch("u3"),
+                               rtol=1e-6, atol=1e-6)      # no contamination
+    srv.refresh_params(None)                              # model push
+    assert all(srv.fetch(u) is None for u in ("u1", "u2", "u3"))
+    assert len(srv.store) == 0 and srv.table_bytes() == 0
+    srv.ingest_history("u2", *h["u2"])                    # lazily re-encoded
+    ref2 = _server()
+    ref2.ingest_history("u2", *h["u2"])
+    np.testing.assert_allclose(srv.fetch("u2"), ref2.fetch("u2"),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis properties (fuzzed shapes/seeds; optional dep, slow-marked)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+@given(n_events=st.integers(1, 12), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_property_history_equals_event_fold(n_events, seed):
+    rng = np.random.default_rng(seed)
+    items, cats = _random_events(rng, n_events)
+    for backend in BACKENDS:
+        a = _server(backend)
+        a.ingest_history("u", items, cats)
+        b = _server(backend)
+        for i, c in zip(items, cats):
+            b.ingest_event("u", int(i), int(c))
+        np.testing.assert_allclose(a.tables["u"], b.tables["u"],
+                                   rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.slow
+@given(n_users=st.integers(1, 5), n_events=st.integers(1, 16),
+       seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_property_batched_events_equal_loop(n_users, n_events, seed):
+    rng = np.random.default_rng(seed)
+    users = rng.integers(0, n_users, n_events).tolist()
+    items, cats = _random_events(rng, n_events)
+    for backend in BACKENDS:
+        a = _server(backend)
+        for u, i, c in zip(users, items, cats):
+            a.ingest_event(u, int(i), int(c))
+        b = _server(backend)
+        b.ingest_events(users, items, cats)
+        for u in set(users):
+            np.testing.assert_allclose(a.tables[u], b.tables[u],
+                                       rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.slow
+@given(ops=st.lists(st.tuples(st.sampled_from(["assign", "evict"]),
+                              st.integers(0, 9)), max_size=40),
+       seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_property_store_index_consistent(ops, seed):
+    """Random assign/evict sequences: slots stay distinct, free+used covers
+    capacity, evicted rows read zero."""
+    store = TableStore(2, 4, 8, capacity=1)
+    live = set()
+    for op, u in ops:
+        if op == "assign":
+            store.write(store.assign([u]), jnp.ones((1, 2, 4, 8)) * (u + 1))
+            live.add(u)
+        else:
+            assert store.evict(u) == (u in live)
+            live.discard(u)
+    assert len(store) == len(live)
+    slots = [store.slot(u) for u in live]
+    assert len(set(slots)) == len(slots)                   # distinct slots
+    assert len(store._free) + len(live) == store.capacity  # full coverage
+    for u in live:
+        np.testing.assert_array_equal(store.row(u),
+                                      np.full((2, 4, 8), u + 1.0))
