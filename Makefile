@@ -3,14 +3,16 @@
 # `test-fast` skips the slow property/parity suites (no hypothesis needed);
 # `test-full` runs everything, including the hypothesis property tests and
 # interpret-mode kernel parity (hypothesis optional — see requirements-dev).
+# `docs-check` verifies intra-repo doc links + kernel docstrings; it rides
+# in the default test-fast / ci paths.
 PYTHONPATH := src
 
-.PHONY: test test-fast test-full bench-smoke ci
+.PHONY: test test-fast test-full bench-smoke docs-check ci
 
 test:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
 
-test-fast:
+test-fast: docs-check
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q -m "not slow"
 
 test-full:
@@ -19,4 +21,7 @@ test-full:
 bench-smoke:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --only table5
 
-ci: test bench-smoke
+docs-check:
+	python tools/docs_check.py
+
+ci: test bench-smoke docs-check

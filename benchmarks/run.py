@@ -3,8 +3,11 @@
 Usage:
     PYTHONPATH=src python -m benchmarks.run [--full] [--only table1,...]
 
-Prints ``name,us_per_call,derived`` CSV (plus a roofline summary read from
-the dry-run artifacts, if present).
+Prints ``name,us_per_call,shards,derived`` CSV (plus a roofline summary read
+from the dry-run artifacts, if present). ``shards`` is the device count the
+row's table store was sharded over (``-`` where sharding doesn't apply);
+table5 emits >1 when run under a host-local mesh, e.g.
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
 """
 from __future__ import annotations
 
@@ -60,21 +63,23 @@ def main() -> None:
     args = p.parse_args()
     todo = args.only.split(",") if args.only else ALL
 
-    print("name,us_per_call,derived")
+    print("name,us_per_call,shards,derived")
     failures = []
     for name in todo:
         t0 = time.time()
         try:
             rows = _module(name).run(quick=not args.full)
             for r in rows:
-                print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+                print(f"{r['name']},{r['us_per_call']:.1f},"
+                      f"{r.get('shards', '-')},{r['derived']}")
         except Exception as e:
             traceback.print_exc(file=sys.stderr)
             failures.append((name, repr(e)))
         print(f"# {name} done in {time.time() - t0:.0f}s", file=sys.stderr)
 
     for r in roofline_rows():
-        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+        print(f"{r['name']},{r['us_per_call']:.1f},"
+              f"{r.get('shards', '-')},{r['derived']}")
 
     if failures:
         print(f"# FAILURES: {failures}", file=sys.stderr)

@@ -16,6 +16,11 @@ scoring dispatch) vs the per-user ``handle_request`` loop, and batched
 ``ingest_events`` vs the per-event loop — users/sec and events/sec on both
 backends (the per-dispatch overhead the per-user loop pays N times is
 exactly what §4.4's "millions of users" deployment cannot afford).
+
+The **sharded** section reports the same store flow against a
+``ShardedTableStore`` row-sharded over every visible device (the ``shards``
+CSV column): run under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+to exercise an 8-way host-local mesh on CPU.
 """
 from __future__ import annotations
 
@@ -28,7 +33,6 @@ import numpy as np
 from repro.core.interest import InterestConfig
 from repro.data.synthetic import SyntheticCTRConfig, generate_batch
 from repro.models.ctr import CTRModel, CTRConfig
-from repro.serve.bse_server import BSEServer
 from repro.serve.ctr_server import CTRServer
 
 
@@ -49,13 +53,7 @@ def run(quick: bool = True):
                         short_len=16, mlp_hidden=(64, 32), interest=interest)
         model = CTRModel(cfg)
         params = model.init(jax.random.PRNGKey(0))
-        bse = None
-        if mode == "decoupled":
-            embed = lambda p, i, c, _m=model: _m._embed_behaviors(
-                p, jnp.asarray(i), jnp.asarray(c))
-            bse = BSEServer(embed, params, model.engine,
-                            R=params["interest"]["buffers"]["R"])
-        server = CTRServer(model, params, bse, mode=mode)
+        server = CTRServer.build(model, params, mode)
         rng = np.random.default_rng(0)
         raw = generate_batch(dcfg, 1, 0)
         user = {k: jnp.asarray(v) for k, v in raw.items() if k.startswith("hist")}
@@ -71,6 +69,7 @@ def run(quick: bool = True):
         servers[tag] = server
         rows.append({"name": f"table5/{tag}", "us_per_call":
                      1e3 * server.stats.ms_per_request,
+                     "shards": 1 if mode == "decoupled" else "-",
                      "derived": f"ms_per_request={server.stats.ms_per_request:.2f}"})
     dec = servers["decoupled[xla]"].stats.ms_per_request
     ta = servers["target_attention"].stats.ms_per_request
@@ -86,6 +85,7 @@ def run(quick: bool = True):
                  "derived": f"{servers['decoupled[xla]'].bse.table_bytes()}"
                             "B_fixed_(L-free,bf16_wire)"})
     rows.extend(throughput_rows(quick))
+    rows.extend(sharded_rows(quick))
     return rows
 
 
@@ -108,11 +108,8 @@ def throughput_rows(quick: bool = True, n_users: int = 1024,
                                                 backend=backend))
         model = CTRModel(cfg)
         params = model.init(jax.random.PRNGKey(0))
-        embed = lambda p, i, c, _m=model: _m._embed_behaviors(
-            p, jnp.asarray(i), jnp.asarray(c))
-        bse = BSEServer(embed, params, model.engine,
-                        R=params["interest"]["buffers"]["R"], capacity=n)
-        ctr = CTRServer(model, params, bse, mode="decoupled")
+        ctr = CTRServer.build(model, params, "decoupled", capacity=n)
+        bse = ctr.bse
         rng = np.random.default_rng(0)
         raw = generate_batch(dcfg, n, 0)
         hists = {k: v for k, v in raw.items() if k.startswith("hist")}
@@ -171,11 +168,91 @@ def throughput_rows(quick: bool = True, n_users: int = 1024,
 
         tag = f"throughput[{backend}]"
         rows.append({"name": f"table5/{tag}/users_per_sec",
-                     "us_per_call": 1e6 / batch_ups,
+                     "us_per_call": 1e6 / batch_ups, "shards": 1,
                      "derived": f"batched={batch_ups:.0f}/s_loop={loop_ups:.0f}/s"
                                 f"_speedup={batch_ups / loop_ups:.1f}x_N={n}"})
         rows.append({"name": f"table5/{tag}/events_per_sec",
-                     "us_per_call": 1e6 / batch_eps,
+                     "us_per_call": 1e6 / batch_eps, "shards": 1,
                      "derived": f"batched={batch_eps:.0f}/s_loop={loop_eps:.0f}/s"
                                 f"_speedup={batch_eps / loop_eps:.1f}x_N={n}"})
+    return rows
+
+
+def sharded_rows(quick: bool = True, n_users: int = 512,
+                 chunk: int = 128) -> list[dict]:
+    """ShardedTableStore over every visible device (the ``shards`` column):
+    batched ingest_histories / fetch_many / ingest_events against the
+    row-sharded store, with the single-device TableStore numbers inline for
+    comparison. XLA backend only — kernel (Pallas) parity under sharding is
+    pinned by ``tests/test_sharded_store.py``; interpret mode would measure
+    the simulator, not the path. On one device the sharded store still runs
+    (a 1-shard mesh), so the column is always populated."""
+    from repro.distributed.compat import make_auto_mesh
+
+    S = len(jax.devices())
+    n = min(n_users, 128) if quick and S == 1 else n_users
+    ch = min(chunk, n)
+    L = 128
+    dcfg = SyntheticCTRConfig(hist_len=L, n_items=4000, n_cats=50)
+    cfg = CTRConfig(arch="din", n_items=4000, n_cats=50, long_len=L,
+                    short_len=8, mlp_hidden=(32,), embed_dim=16,
+                    interest=InterestConfig(kind="sdim", m=24, tau=3,
+                                            backend="xla"))
+    model = CTRModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    raw = generate_batch(dcfg, n, 0)
+    rng = np.random.default_rng(0)
+    ev_i = rng.integers(0, 4000, n)
+    ev_c = rng.integers(0, 50, n)
+    rows = []
+    mesh = make_auto_mesh((S,), ("model",))
+    perf = {}
+    for variant, m in (("single", None), ("sharded", mesh)):
+        ctr = CTRServer.build(model, params, "decoupled", mesh=m, capacity=n)
+        bse = ctr.bse
+
+        def ingest_all():
+            for lo in range(0, n, ch):
+                hi = min(lo + ch, n)
+                sl = slice(lo, hi)
+                bse.ingest_histories(
+                    list(range(lo, hi)), raw["hist_items"][sl],
+                    raw["hist_cats"][sl], raw["hist_mask"][sl])
+
+        ingest_all()                                       # warm (compile)
+        bse.store.clear()                                  # re-ingest from empty
+        t0 = time.perf_counter()
+        ingest_all()
+        jax.block_until_ready(bse.store.data)
+        enc_ups = n / (time.perf_counter() - t0)
+
+        users = list(range(n))
+        bse.fetch_many(users[:ch])                         # warm
+        t0 = time.perf_counter()
+        for lo in range(0, n, ch):
+            jax.block_until_ready(bse.fetch_many(users[lo:lo + ch]))
+        fetch_ups = n / (time.perf_counter() - t0)
+
+        bse.ingest_events(users[:ch], ev_i[:ch], ev_c[:ch])  # warm
+        jax.block_until_ready(bse.store.data)
+        t0 = time.perf_counter()
+        for lo in range(0, n, ch):
+            hi = min(lo + ch, n)
+            bse.ingest_events(users[lo:hi], ev_i[lo:hi], ev_c[lo:hi])
+        jax.block_until_ready(bse.store.data)
+        perf[variant] = (enc_ups, fetch_ups, n / (time.perf_counter() - t0))
+
+    enc, fetch, ev = perf["sharded"]
+    enc1, fetch1, ev1 = perf["single"]
+    rows.append({"name": "table5/sharded/fetch_users_per_sec",
+                 "us_per_call": 1e6 / fetch, "shards": S,
+                 "derived": f"sharded={fetch:.0f}/s_single={fetch1:.0f}/s"
+                            f"_N={n}_chunk={ch}"})
+    rows.append({"name": "table5/sharded/encode_users_per_sec",
+                 "us_per_call": 1e6 / enc, "shards": S,
+                 "derived": f"sharded={enc:.0f}/s_single={enc1:.0f}/s"})
+    rows.append({"name": "table5/sharded/events_per_sec",
+                 "us_per_call": 1e6 / ev, "shards": S,
+                 "derived": f"sharded={ev:.0f}/s_single={ev1:.0f}/s"
+                            f"_capacity_scales_{S}x"})
     return rows

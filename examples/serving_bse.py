@@ -23,7 +23,6 @@ import numpy as np
 from repro.core.interest import InterestConfig
 from repro.data.synthetic import SyntheticCTRConfig, generate_batch
 from repro.models.ctr import CTRModel, CTRConfig
-from repro.serve.bse_server import BSEServer
 from repro.serve.ctr_server import CTRServer
 
 
@@ -46,11 +45,9 @@ def main():
     params = model.init(jax.random.PRNGKey(0))
     print(f"SDIM engine backend: {model.engine.backend}")
 
-    embed = lambda p_, i, c: model._embed_behaviors(p_, jnp.asarray(i), jnp.asarray(c))
-    bse = BSEServer(embed, params, model.engine,
-                    R=params["interest"]["buffers"]["R"])
-    ctr = CTRServer(model, params, bse, mode="decoupled")
-    inline = CTRServer(model, params, mode="inline")
+    ctr = CTRServer.build(model, params, "decoupled")
+    bse = ctr.bse
+    inline = CTRServer.build(model, params, "inline")
 
     rng = np.random.default_rng(0)
     users = {}

@@ -54,7 +54,7 @@ same (m, d) projection operand and agree bit-for-bit.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+from functools import lru_cache, partial
 from typing import Optional
 
 import jax
@@ -158,6 +158,62 @@ _update_donated = jax.jit(_update_impl, static_argnames=_STATIC_UPDATE,
                           donate_argnums=(0,))
 
 
+# ---------------------------------------------------------------------------
+# sharded dispatch bodies (shard_map over a mesh axis; cached per mesh)
+# ---------------------------------------------------------------------------
+@lru_cache(maxsize=None)
+def _sharded_update_fn(mesh, axis, tau, backend, block_l, interpret, donate):
+    """One dispatch folding a replicated event batch into a row-sharded
+    (S, C, G, U, d) store: every shard hashes the whole batch (events are
+    O(B·E·d), tiny next to the store) but applies only the rows it owns —
+    foreign rows get their mask zeroed and their slot clamped to 0, so both
+    the XLA scatter-add and the Pallas ``sdim_update`` kernel write
+    ``store[0] + 0`` for them, a no-op that composes with real slot-0 runs."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    def fn(store, shard_ids, locals_, events, mask, R):
+        def body(block, sh, lo, ev, mk, r):
+            mine = sh == jax.lax.axis_index(axis)
+            new = _update_impl(
+                block[0], jnp.where(mine, lo, 0), ev,
+                mk * mine[:, None].astype(mk.dtype), r,
+                tau=tau, backend=backend, block_l=block_l,
+                interpret=interpret)
+            return new[None]
+
+        return shard_map(
+            body, mesh=mesh,
+            in_specs=(P(axis, None, None, None, None), P(None), P(None),
+                      P(None, None, None), P(None, None), P(None, None)),
+            out_specs=P(axis, None, None, None, None),
+            check_rep=False)(store, shard_ids, locals_, events, mask, R)
+
+    return jax.jit(fn, donate_argnums=(0,) if donate else ())
+
+
+@lru_cache(maxsize=None)
+def _sharded_serve_fn(mesh, axis, tau, backend, block_l, interpret):
+    """Batch-parallel fused serve: the (B, …) request batch is sharded over
+    ``axis`` (callers pad B to a multiple of the axis size); each shard runs
+    the whole encode+query pipeline on its B/S users independently."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    def fn(q, seq, mask, R):
+        def body(q, seq, mask, r):
+            return _serve(q, seq, mask, r, tau=tau, backend=backend,
+                          block_l=block_l, interpret=interpret)
+
+        return shard_map(
+            body, mesh=mesh,
+            in_specs=(P(axis, None, None), P(axis, None, None),
+                      P(axis, None), P(None, None)),
+            out_specs=P(axis, None), check_rep=False)(q, seq, mask, R)
+
+    return jax.jit(fn)
+
+
 @partial(jax.jit, static_argnames=("tau", "backend", "block_l", "interpret"))
 def _serve(q, seq, mask, R, *, tau, backend, block_l, interpret):
     if backend == "xla":
@@ -243,6 +299,54 @@ class SDIMEngine:
         return fn(store, jnp.asarray(slots, jnp.int32), events, mask,
                   self._R(R), tau=self.cfg.tau, backend=self.backend,
                   block_l=self.cfg.block_l, interpret=self.interpret)
+
+    # ------------------------------------------------------------------
+    # sharded entry points (ShardedTableStore / device-mesh serving)
+    # ------------------------------------------------------------------
+    def update_sharded(self, store: jax.Array, slots, events: jax.Array,
+                       mask: Optional[jax.Array] = None,
+                       R: Optional[jax.Array] = None, *, mesh,
+                       donate: bool = False) -> jax.Array:
+        """``update`` against a row-sharded (S, C, G, U, d) store: one
+        ``shard_map`` dispatch in which each shard folds exactly the rows it
+        owns. ``slots`` is the (B, 2) [shard, local] handle array a
+        ``ShardedTableStore`` hands out; ``mesh`` a Mesh/MeshCtx whose model
+        axis the store is sharded over. Semantics (duplicate accumulation,
+        fp32 sums, donation) match ``update``."""
+        from repro.distributed.mesh_ctx import MeshCtx
+
+        ctx = MeshCtx.wrap(mesh)
+        if mask is None:
+            mask = jnp.ones(events.shape[:2], events.dtype)
+        slots = jnp.asarray(slots, jnp.int32)
+        fn = _sharded_update_fn(ctx.mesh, ctx.model_axis, self.cfg.tau,
+                                self.backend, self.cfg.block_l,
+                                self.interpret, donate)
+        return fn(store, slots[:, 0], slots[:, 1], events, mask, self._R(R))
+
+    def serve_sharded(self, q: jax.Array, seq: jax.Array,
+                      mask: Optional[jax.Array] = None,
+                      R: Optional[jax.Array] = None, *, mesh) -> jax.Array:
+        """``serve`` with the request batch sharded over the mesh's model
+        axis: B users' fused encode+query run S-way parallel (B is padded to
+        a multiple of S internally; padded rows are sliced off)."""
+        from repro.distributed.mesh_ctx import MeshCtx
+
+        ctx = MeshCtx.wrap(mesh)
+        S = ctx.mesh.shape[ctx.model_axis]
+        B = q.shape[0]
+        pad = -B % S
+        if mask is None:
+            mask = jnp.ones(seq.shape[:2], seq.dtype)
+        if pad:
+            zeros = lambda x: jnp.zeros((pad, *x.shape[1:]), x.dtype)
+            q = jnp.concatenate([q, zeros(q)])
+            seq = jnp.concatenate([seq, zeros(seq)])
+            mask = jnp.concatenate([mask, zeros(mask)])
+        fn = _sharded_serve_fn(ctx.mesh, ctx.model_axis, self.cfg.tau,
+                               self.backend, self.cfg.block_l, self.interpret)
+        out = fn(q, seq, mask, self._R(R))
+        return out[:B].astype(seq.dtype)
 
 
 def engine_from_interest(icfg, d: Optional[int] = None) -> SDIMEngine:

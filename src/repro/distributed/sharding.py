@@ -71,6 +71,14 @@ RECSYS_RULES: list[tuple[str, tuple]] = [
     ("wide/", ("model", None)),
 ]
 
+
+def table_store_spec(axis: str = "model") -> P:
+    """Row-sharding spec for the serving-side (S, C, G, U, d) BSE table
+    store (``serve/table_store.ShardedTableStore``): slots over the model
+    axis — the same recsys rule as the embedding tables above (the per-user
+    tables ARE the model; everything else stays replicated)."""
+    return P(axis, None, None, None, None)
+
 GNN_RULES: list[tuple[str, tuple]] = []
 
 FAMILY_RULES = {"lm": LM_RULES, "recsys": RECSYS_RULES, "gnn": GNN_RULES}

@@ -1,3 +1,8 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Fused Pallas kernels for the SDIM hot path — see README.md in this
+directory for the per-kernel block specs, VMEM residency, ragged-padding
+contracts and oracle pins.
+
+OPTIONAL layer: each subpackage is <name>.py (the pallas_call) + ops.py
+(public entry) + ref.py (pure-jnp oracle), added only for compute hot-spots
+the paper itself optimizes.
+"""

@@ -13,6 +13,20 @@ exactly one 128-lane tile.
 TPU target: fp32 accumulation in the output block, which is revisited across
 the L-grid (sequential innermost dimension). Validated on CPU via
 ``interpret=True`` against ``ref.py``.
+
+Contract
+--------
+* **Block specs** — grid ``(B, L/TL)``; per step: seq ``(1, TL, d)``, mask
+  ``(1, TL)``, R ``(m, d)`` replicated, output table ``(1, G·U, d)`` at
+  block ``(b, 0, 0)`` (same block every L-step — legal because the
+  innermost grid axis is sequential on TPU).
+* **VMEM residency** — one seq tile + R + the full ``(G·U, d)`` table;
+  ``128·d`` floats per table at paper dims, far under budget. ``block_l``
+  (default 128) is the ``EngineConfig`` knob.
+* **Ragged padding** — L is padded to whole blocks by ``padded_blocks`` /
+  ``pad_axis``; padded behaviors carry ``mask=0`` so they scatter nothing.
+* **Oracle** — ``ref.py`` (== ``core/sdim.bucket_table`` one-hot einsum),
+  pinned by ``tests/test_kernels.py`` in interpret mode, atol ≲ 1e-5.
 """
 from __future__ import annotations
 

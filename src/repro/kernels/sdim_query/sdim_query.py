@@ -10,6 +10,19 @@ Key trick: because each query's one-hot row has exactly one 1 per group, the
 single (TC, G·U)×(G·U, d) GEMM *simultaneously* gathers every group's bucket
 and sums over groups — the paper's gather + mean collapses into one MXU
 matmul against the pre-normalized table.
+
+Contract
+--------
+* **Block specs** — grid ``(B, C/TC)``; per step: q ``(1, TC, d)``, table
+  ``(1, G·U, d)`` (the whole user table, same block every C-step), R
+  ``(m, d)`` replicated; output ``(1, TC, d)``.
+* **VMEM residency** — the ℓ2-normalized table lives in a ``(G·U, d)``
+  scratch buffer computed once at ``c == 0`` and reused by every C-tile
+  (sequential innermost axis). ``block_c`` (default 128) is the knob.
+* **Ragged padding** — C is padded to whole blocks; padded candidates are
+  computed on zeros and sliced off the output.
+* **Oracle** — ``ref.py`` (== ``core/sdim.fused_query``), pinned by
+  ``tests/test_kernels.py`` in interpret mode, atol ≲ 1e-5.
 """
 from __future__ import annotations
 

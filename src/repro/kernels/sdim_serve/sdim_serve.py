@@ -14,6 +14,22 @@ flips from encode to query — the table never touches HBM at all.
 
 Ragged L and C are padded internally (padded behaviors carry mask=0;
 padded candidates are computed on zeros and sliced off).
+
+Contract
+--------
+* **Block specs** — grid ``(B, L/TL + 1)``: steps ``l < nL`` stream seq
+  tiles ``(1, TL, d)`` + mask ``(1, TL)``; the final step reads the whole
+  candidate block ``(1, C_pad, d)`` and writes the output ``(1, C_pad, d)``;
+  R ``(m, d)`` replicated throughout.
+* **VMEM residency** — the bucket table is a ``(G·U, d)`` scratch
+  accumulator alive across the whole grid row: encoded into during the L
+  steps, ℓ2-normalized and queried in the final step. It NEVER reaches HBM
+  (running encode+query back to back would materialize it twice).
+  ``block_l`` (default 128) is the knob; C is one block.
+* **Ragged padding** — L padded with ``mask=0`` behaviors; C padded with
+  zero candidates, sliced off the output.
+* **Oracle** — ``ref.py`` (encode ∘ query composition), pinned by
+  ``tests/test_kernels.py`` in interpret mode, atol ≲ 1e-5.
 """
 from __future__ import annotations
 

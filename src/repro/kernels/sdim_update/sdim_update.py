@@ -22,6 +22,24 @@ slot, only the LAST occurrence of each slot holds the full sum; the wrapper
 routes earlier duplicates to a trash row and writes the rest back with one
 XLA scatter. Validated on CPU via ``interpret=True`` against ``ref.py``'s
 segment-sum oracle.
+
+Contract
+--------
+* **Block specs** — ``PrefetchScalarGridSpec`` with the sorted slot vector
+  scalar-prefetched; grid ``(B, E/TE)``; per step: store row ``(1, G·U, d)``
+  selected by ``slots[b]`` (the gather IS the block index map), events
+  ``(1, TE, d)``, mask ``(1, TE)``, R ``(m, d)``; output row ``(1, G·U, d)``.
+* **VMEM residency** — a ``(G·U, d)`` running-total scratch accumulator,
+  re-seeded from the store row whenever the (sorted) slot changes and
+  carried across duplicate-slot rows. ``block_e`` (= engine ``block_l``)
+  is the knob.
+* **Ragged padding** — E padded to whole blocks with ``mask=0`` events
+  (zero deltas). Zero-masked rows aimed at a clamped slot are exact no-ops
+  (``store[slot] + 0`` written back), which is what ``update_sharded``
+  relies on for foreign-shard rows.
+* **Oracle** — ``ref.py`` (bucket + ``segment_sum``, O(N) dense
+  intermediate), pinned by ``tests/test_table_store.py`` kernel-parity
+  tests in interpret mode, atol ≲ 1e-4.
 """
 from __future__ import annotations
 

@@ -2,11 +2,18 @@
 
 recsys archs -> BSE + CTR server loop over synthetic requests (the paper's
 deployment); LM archs -> decode loop (exact KV or --sdim-kv compressed).
+
+``--shards N`` (or an explicit ``--mesh DxM``) shards the BSE table store
+over a device mesh's model axis. On a CPU host, fake the devices first:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+        python -m repro.launch.serve --arch sdim-paper --shards 8
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import math
 
 import jax
 import jax.numpy as jnp
@@ -14,6 +21,29 @@ import numpy as np
 
 from repro.configs import registry
 from repro.core.engine import BACKENDS
+
+
+def build_mesh(shards: int, mesh_spec: str = None):
+    """``--mesh "2x4"`` ((data, model) axes) or ``--shards N`` ((model,)
+    only) -> a ``MeshCtx`` over host-local devices; ``None`` when serving
+    unsharded. The table store shards over the model axis."""
+    if not mesh_spec and shards <= 1:
+        return None
+    from repro.distributed.compat import make_auto_mesh
+    from repro.distributed.mesh_ctx import MeshCtx
+
+    if mesh_spec:
+        dims = tuple(int(x) for x in mesh_spec.lower().split("x"))
+        assert len(dims) == 2, f"--mesh wants DxM, got {mesh_spec!r}"
+        shape, axes = dims, ("data", "model")
+    else:
+        shape, axes = (shards,), ("model",)
+    if math.prod(shape) > len(jax.devices()):
+        raise SystemExit(
+            f"mesh {shape} needs {math.prod(shape)} devices, have "
+            f"{len(jax.devices())}; on CPU set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={math.prod(shape)}")
+    return MeshCtx(make_auto_mesh(shape, axes))
 
 
 def main():
@@ -26,6 +56,13 @@ def main():
     p.add_argument("--micro-batch", type=int, default=1,
                    help="serve requests in bursts of this size: one "
                         "fetch_many + one scoring dispatch per burst")
+    p.add_argument("--shards", type=int, default=1,
+                   help="shard the BSE table store over this many devices "
+                        "(model-axis mesh; see module docstring for the "
+                        "host-local XLA_FLAGS recipe)")
+    p.add_argument("--mesh", default=None,
+                   help='explicit mesh shape "DxM" (data x model); '
+                        "overrides --shards")
     p.add_argument("--tokens", type=int, default=32, help="LM decode steps")
     p.add_argument("--sdim-kv", action="store_true",
                    help="LM: SDIM bucket-compressed KV decode")
@@ -33,10 +70,13 @@ def main():
 
     mod = registry.get(args.arch)
     cfg = mod.SMOKE
+    if mod.FAMILY != "recsys" and (args.mesh or args.shards > 1):
+        raise SystemExit(
+            f"--shards/--mesh shard the BSE table store (recsys serving "
+            f"only); arch {args.arch!r} is family {mod.FAMILY!r}")
     if mod.FAMILY == "recsys":
         from repro.data.synthetic import SyntheticCTRConfig, generate_batch
         from repro.models.ctr import CTRModel
-        from repro.serve.bse_server import BSEServer
         from repro.serve.ctr_server import CTRServer
 
         if cfg.interest.kind == "sdim":
@@ -45,16 +85,21 @@ def main():
         model = CTRModel(cfg)
         params = model.init(jax.random.PRNGKey(0))
         mode = "decoupled" if cfg.interest.kind == "sdim" else "inline"
-        bse = None
-        if mode == "decoupled":
-            embed = lambda p_, i, c: model._embed_behaviors(
-                p_, jnp.asarray(i), jnp.asarray(c))
-            bse = BSEServer(embed, params, model.engine,
-                            R=params["interest"]["buffers"]["R"])
-        server = CTRServer(model, params, bse, mode=mode)
+        if mode != "decoupled" and (args.mesh or args.shards > 1):
+            raise SystemExit(
+                f"--shards/--mesh shard the BSE table store, which only the "
+                f"decoupled (sdim) deployment has; arch {args.arch!r} serves "
+                f"{mode!r}")
+        mesh_ctx = build_mesh(args.shards, args.mesh) if mode == "decoupled" else None
+        server = CTRServer.build(model, params, mode, mesh=mesh_ctx)
+        bse = server.bse
         if cfg.interest.kind == "sdim":
             print(f"SDIM engine backend: {model.engine.backend}"
                   f"{' (interpret)' if model.engine.backend == 'pallas' and model.engine.interpret else ''}")
+        if mesh_ctx is not None:
+            print(f"BSE table store sharded over "
+                  f"{bse.store.n_shards} devices "
+                  f"(mesh {dict(mesh_ctx.mesh.shape)})")
         dcfg = SyntheticCTRConfig(hist_len=cfg.long_len, n_items=cfg.n_items,
                                   n_cats=cfg.n_cats)
         rng = np.random.default_rng(0)

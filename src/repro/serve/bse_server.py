@@ -6,7 +6,9 @@ Responsibilities modeled faithfully:
     L-free — "no matter how long the user's behavior is, we only need to
     transmit fixed-length vectors") in a contiguous multi-user
     ``TableStore`` — one (N, G, U, d) device array + user→slot index with
-    amortized-doubling growth and slot recycling on eviction;
+    amortized-doubling growth and slot recycling on eviction — or, given a
+    ``mesh``, a ``ShardedTableStore`` row-sharded over the mesh's model
+    axis, so the serving state scales past one device's HBM;
   * ingest real-time behavior events incrementally (O(m·d) per event, no
     re-encode of history) — and *batched*: ``ingest_events`` folds B events
     for B (possibly repeated) users in ONE ``SDIMEngine.update`` dispatch,
@@ -38,7 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.engine import SDIMEngine
-from repro.serve.table_store import TableStore
+from repro.serve.table_store import ShardedTableStore, TableStore
 
 
 @dataclasses.dataclass
@@ -85,15 +87,25 @@ class BSEServer:
         R: Optional[jax.Array] = None,
         wire_dtype: Any = jnp.bfloat16,
         capacity: int = 64,
+        mesh: Any = None,
     ):
+        """``mesh`` (a Mesh or MeshCtx) shards the table store over the
+        mesh's model axis (``ShardedTableStore``): capacity scales with the
+        mesh, ingest/fetch stay one dispatch each, event folds go through
+        ``SDIMEngine.update_sharded``. ``None`` keeps the single-device
+        ``TableStore``."""
         self.embed_fn = embed_fn
         self.params = params
         self.engine = engine
         self.R = engine.R if R is None else R
         self.wire_dtype = jnp.dtype(wire_dtype)
         cfg = engine.cfg
-        self.store = TableStore(cfg.n_groups, cfg.n_buckets, cfg.d,
-                                capacity=capacity)
+        if mesh is None:
+            self.store = TableStore(cfg.n_groups, cfg.n_buckets, cfg.d,
+                                    capacity=capacity)
+        else:
+            self.store = ShardedTableStore(cfg.n_groups, cfg.n_buckets,
+                                           cfg.d, mesh, capacity=capacity)
         self.tables = _TablesView(self.store)
         self.stats = BSEStats()
 
@@ -151,8 +163,14 @@ class BSEServer:
         ev_e = self.embed_fn(self.params, items, cats)        # (B, E, d)
         m = None if mask is None else jnp.asarray(mask)
         slots = self.store.assign(users)
-        self.store.data = self.engine.update(self.store.data, slots, ev_e, m,
-                                             R=self.R, donate=True)
+        if self.store.sharded:
+            self.store.data = self.engine.update_sharded(
+                self.store.data, slots, ev_e, m, R=self.R,
+                mesh=self.store.mesh_ctx, donate=True)
+        else:
+            self.store.data = self.engine.update(self.store.data, slots,
+                                                 ev_e, m, R=self.R,
+                                                 donate=True)
         self.stats.n_updates += int(items.size if mask is None
                                     else np.sum(np.asarray(mask) > 0))
 

@@ -20,6 +20,12 @@ All SDIM compute (decoupled bucket reads AND the inline hash path) reaches
 the kernels through the model's ``SDIMEngine``, so the server inherits the
 engine's backend (``xla`` reference vs fused ``pallas`` kernels) from the
 model config with no server-side branching.
+
+``CTRServer.build`` is the mesh-aware constructor for the whole serving
+pair: it wires the model's behavior-embedding fn and checkpointed hash
+family into the BSE server, and a ``mesh=`` shards the BSE table store over
+the mesh's model axis (see docs/ARCHITECTURE.md) — the request path above
+is unchanged, ``fetch_many`` just resolves against the sharded store.
 """
 from __future__ import annotations
 
@@ -47,6 +53,30 @@ class ServeStats:
 
 
 class CTRServer:
+    @classmethod
+    def build(cls, model: CTRModel, params: Any, mode: str = "decoupled",
+              *, mesh: Any = None, capacity: int = 64,
+              wire_dtype: Any = jnp.bfloat16) -> "CTRServer":
+        """Mesh-aware construction of the whole serving pair: wires the
+        model's behavior-embedding fn and checkpointed hash family ``R``
+        into a ``BSEServer`` (decoupled mode), sharding its table store over
+        ``mesh``'s model axis when a Mesh/MeshCtx is given. Every launcher
+        and benchmark builds through here so the embed/R plumbing lives in
+        one place."""
+        bse = None
+        if mode != "decoupled" and mesh is not None:
+            raise ValueError(
+                f"mesh shards the BSE table store, which only the decoupled "
+                f"deployment has (mode={mode!r})")
+        if mode == "decoupled":
+            embed = lambda p, i, c: model._embed_behaviors(
+                p, jnp.asarray(i), jnp.asarray(c))
+            bse = BSEServer(embed, params, model.engine,
+                            R=params["interest"]["buffers"]["R"],
+                            wire_dtype=wire_dtype, capacity=capacity,
+                            mesh=mesh)
+        return cls(model, params, bse, mode=mode)
+
     def __init__(self, model: CTRModel, params: Any,
                  bse_server: Optional[BSEServer] = None, mode: str = "decoupled"):
         assert mode in ("decoupled", "inline", "target_attention")

@@ -13,9 +13,20 @@ full dispatch for one user. The store instead keeps
     slots are zeroed and pushed to the free list; the next new user reuses
     them, keeping the array dense).
 
+``ShardedTableStore`` is the same contract partitioned over a device mesh:
+the store becomes a ``(S, C, G, U, d)`` array row-sharded over the mesh's
+model axis (per the recsys layout in ``distributed/sharding.py`` — the user
+tables ARE the model), a slot handle becomes a ``(shard, local)`` pair, and
+every batched op stays ONE dispatch: a ``shard_map`` body in which each
+shard gathers/scatters only the rows it owns (foreign rows are masked out,
+then a psum assembles gathers; foreign scatters are dropped out-of-range).
+Doubling growth and slot recycling work per shard, so capacity scales with
+the mesh instead of with one device's HBM.
+
 The store itself is compute-free: callers (``BSEServer``) produce rows via
-``SDIMEngine.encode`` and fold events via ``SDIMEngine.update``; this class
-only owns the memory and the index.
+``SDIMEngine.encode`` and fold events via ``SDIMEngine.update`` (sharded:
+``SDIMEngine.update_sharded``); this class only owns the memory and the
+index.
 """
 from __future__ import annotations
 
@@ -25,6 +36,11 @@ from typing import Any, Iterator, Optional, Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed.mesh_ctx import MeshCtx
+from repro.distributed.sharding import table_store_spec
 
 
 # the store drops its reference the moment the scatter returns, so the buffer
@@ -35,6 +51,8 @@ def _scatter_set(data, slots, rows):
 
 
 class TableStore:
+    sharded = False
+
     def __init__(self, n_groups: int, n_buckets: int, d: int,
                  capacity: int = 64, dtype: Any = jnp.float32):
         assert capacity >= 1
@@ -131,3 +149,203 @@ class TableStore:
         """One scatter: overwrite (B,) slots with rows (B, G, U, d)."""
         self.data = _scatter_set(self.data, jnp.asarray(slots, jnp.int32),
                                  rows.astype(self.dtype))
+
+
+# ---------------------------------------------------------------------------
+# sharded store: (S, C, G, U, d) row-sharded over the mesh's model axis
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=None)
+def _sharded_ops(mesh, axis: str):
+    """jitted shard_map bodies for one (mesh, axis); cached so every store on
+    the same mesh shares compilations. All three are ONE dispatch each:
+
+      * gather  — every shard reads ``locals`` from its own block, masks the
+        rows it doesn't own to zero, and a psum over ``axis`` assembles the
+        replicated (B, G, U, d) result (exactly one shard contributes each
+        row);
+      * scatter — foreign rows are routed to the out-of-range index C and
+        dropped (``mode="drop"``), so each shard writes only its own rows;
+      * grow    — per-shard doubling: each shard concatenates a zero block of
+        its own size, (S, C, …) -> (S, 2C, …) with no cross-shard traffic.
+    """
+    row5 = table_store_spec(axis)
+    rep1, rep4 = P(None), P(None, None, None, None)
+
+    def gather(data, shard_ids, locals_):
+        def body(block, sh, lo):
+            mine = sh == jax.lax.axis_index(axis)
+            rows = block[0][lo]                              # (B, G, U, d)
+            rows = jnp.where(mine[:, None, None, None], rows, 0)
+            return jax.lax.psum(rows, axis)
+
+        return shard_map(body, mesh=mesh, in_specs=(row5, rep1, rep1),
+                         out_specs=rep4, check_rep=False)(
+                             data, shard_ids, locals_)
+
+    def scatter(data, shard_ids, locals_, rows):
+        cap = data.shape[1]
+
+        def body(block, sh, lo, rw):
+            tgt = jnp.where(sh == jax.lax.axis_index(axis), lo, cap)
+            return block[0].at[tgt].set(rw.astype(block.dtype),
+                                        mode="drop")[None]
+
+        return shard_map(body, mesh=mesh, in_specs=(row5, rep1, rep1, rep4),
+                         out_specs=row5, check_rep=False)(
+                             data, shard_ids, locals_, rows)
+
+    def grow(data):
+        def body(block):
+            return jnp.concatenate([block, jnp.zeros_like(block)], axis=1)
+
+        return shard_map(body, mesh=mesh, in_specs=(row5,),
+                         out_specs=row5, check_rep=False)(data)
+
+    # grow's output is twice its input — donation could never alias, it
+    # would only emit "donated buffers were not usable" warnings
+    return (jax.jit(gather),
+            jax.jit(scatter, donate_argnums=(0,)),
+            jax.jit(grow))
+
+
+class ShardedTableStore:
+    """``TableStore`` partitioned by slot over a mesh axis (default: the
+    model axis, matching the recsys row-sharding rule — the per-user tables
+    ARE the model). Same contract, two representation changes:
+
+      * ``data`` is ``(S, C, G, U, d)`` with shard ``k`` owning block
+        ``data[k]`` (``NamedSharding`` over ``axis``); global capacity is
+        ``S·C`` and grows by doubling every shard's ``C`` at once;
+      * a slot handle is a ``(shard, local)`` pair — ``assign``/``slots``
+        return an ``(B, 2)`` int32 array that ``rows``/``write`` and
+        ``SDIMEngine.update_sharded`` consume. New users go to the shard
+        with the most free slots, so occupancy stays balanced within ±1.
+
+    Handles stay valid across growth (a shard's block only gains rows), so
+    the host index never needs remapping.
+    """
+
+    sharded = True
+
+    def __init__(self, n_groups: int, n_buckets: int, d: int, mesh,
+                 capacity: int = 64, dtype: Any = jnp.float32,
+                 axis: Optional[str] = None):
+        assert capacity >= 1
+        self.mesh_ctx = MeshCtx.wrap(mesh)
+        self.axis = self.mesh_ctx.model_axis if axis is None else axis
+        self.row_shape = (n_groups, n_buckets, d)
+        self.dtype = jnp.dtype(dtype)
+        S = self.n_shards
+        per = max(1, -(-capacity // S))                  # ceil; ≥1 per shard
+        self._sharding = NamedSharding(
+            self.mesh_ctx.mesh, table_store_spec(self.axis))
+        self.data = jax.device_put(
+            jnp.zeros((S, per, *self.row_shape), self.dtype), self._sharding)
+        self._gather, self._scatter, self._grow_op = _sharded_ops(
+            self.mesh_ctx.mesh, self.axis)
+        self._slot_of: dict[Any, tuple[int, int]] = {}
+        self._user_of: dict[tuple[int, int], Any] = {}
+        self._free = [list(range(per - 1, -1, -1)) for _ in range(S)]
+        self.n_grows = 0
+        self.n_evictions = 0
+
+    # ------------------------------------------------------------------
+    # index
+    # ------------------------------------------------------------------
+    @property
+    def n_shards(self) -> int:
+        return self.mesh_ctx.mesh.shape[self.axis]
+
+    @property
+    def per_shard_capacity(self) -> int:
+        return self.data.shape[1]
+
+    @property
+    def capacity(self) -> int:
+        return self.data.shape[0] * self.data.shape[1]
+
+    def __len__(self) -> int:
+        return len(self._slot_of)
+
+    def __contains__(self, user: Any) -> bool:
+        return user in self._slot_of
+
+    def users(self) -> Iterator[Any]:
+        return iter(self._slot_of)
+
+    def slot(self, user: Any) -> Optional[tuple[int, int]]:
+        return self._slot_of.get(user)
+
+    def shard_load(self) -> list[int]:
+        """Live users per shard (balance is an invariant worth asserting)."""
+        per = self.per_shard_capacity
+        return [per - len(f) for f in self._free]
+
+    def slots(self, users: Sequence[Any]) -> np.ndarray:
+        """(B, 2) [shard, local] handles; KeyError names unknown users."""
+        missing = [u for u in users if u not in self._slot_of]
+        if missing:
+            raise KeyError(f"users not in table store: {missing}")
+        return np.asarray([self._slot_of[u] for u in users], np.int32)
+
+    def assign(self, users: Sequence[Any]) -> np.ndarray:
+        """(B, 2) handles for ``users``, allocating unknown ones on the
+        least-loaded shard (growing every shard by doubling when all free
+        lists run dry). Duplicate users in one call share one handle; fresh
+        slots read all-zero."""
+        for u in users:
+            if u in self._slot_of:
+                continue
+            k = max(range(self.n_shards), key=lambda i: len(self._free[i]))
+            if not self._free[k]:
+                self.grow()
+            s = (k, self._free[k].pop())
+            self._slot_of[u] = s
+            self._user_of[s] = u
+        return np.asarray([self._slot_of[u] for u in users], np.int32)
+
+    def grow(self) -> None:
+        per = self.per_shard_capacity
+        self.data = self._grow_op(self.data)
+        for f in self._free:
+            f[:0] = range(2 * per - 1, per - 1, -1)
+        self.n_grows += 1
+
+    def evict(self, user: Any) -> bool:
+        """Drop a user; the zeroed slot is recycled by the next allocation."""
+        s = self._slot_of.pop(user, None)
+        if s is None:
+            return False
+        del self._user_of[s]
+        self.write(np.asarray([s], np.int32),
+                   jnp.zeros((1, *self.row_shape), self.dtype))
+        self._free[s[0]].append(s[1])
+        self.n_evictions += 1
+        return True
+
+    def clear(self) -> None:
+        """Invalidate everything (model push): index emptied, array zeroed."""
+        per = self.per_shard_capacity
+        self._slot_of.clear()
+        self._user_of.clear()
+        self._free = [list(range(per - 1, -1, -1))
+                      for _ in range(self.n_shards)]
+        self.data = jax.device_put(jnp.zeros_like(self.data), self._sharding)
+
+    # ------------------------------------------------------------------
+    # rows
+    # ------------------------------------------------------------------
+    def rows(self, slots) -> jax.Array:
+        """One sharded gather: (B, 2) handles -> replicated (B, G, U, d)."""
+        slots = jnp.asarray(slots, jnp.int32)
+        return self._gather(self.data, slots[:, 0], slots[:, 1])
+
+    def row(self, user: Any) -> Optional[jax.Array]:
+        s = self._slot_of.get(user)
+        return None if s is None else self.rows(np.asarray([s], np.int32))[0]
+
+    def write(self, slots, rows: jax.Array) -> None:
+        """One sharded scatter: overwrite (B, 2) handles with (B, G, U, d)."""
+        slots = jnp.asarray(slots, jnp.int32)
+        self.data = self._scatter(self.data, slots[:, 0], slots[:, 1],
+                                  rows.astype(self.dtype))

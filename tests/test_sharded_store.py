@@ -1,0 +1,186 @@
+"""Sharded TableStore parity (ISSUE 3): on an 8-way host-local mesh, the
+row-sharded store must be indistinguishable from the single-device
+``TableStore`` — fetch/update/serve allclose across random ingest / evict /
+grow sequences, on BOTH backends.
+
+Mesh tests run in SUBPROCESSES (same contract as test_distributed.py): the
+XLA device count must be set before jax initializes, and the main pytest
+process keeps seeing 1 device. The 1-shard in-process test additionally
+pins the sharded code path on the main process's single device, where a
+subprocess would hide it from debuggers.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def run_sub(code: str) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+PREAMBLE = """
+import jax, jax.numpy as jnp, numpy as np, json
+from repro.distributed.compat import make_auto_mesh
+from repro.core.engine import EngineConfig, SDIMEngine
+from repro.serve.bse_server import BSEServer
+
+D = 16
+EI = jax.random.normal(jax.random.PRNGKey(11), (64, D // 2))
+EC = jax.random.normal(jax.random.PRNGKey(12), (16, D // 2))
+def embed(params, items, cats):
+    return jnp.concatenate([EI[jnp.asarray(items) % 64],
+                            EC[jnp.asarray(cats) % 16]], axis=-1)
+
+def engine(backend):
+    return SDIMEngine(EngineConfig(
+        m=12, tau=2, d=D, backend=backend,
+        interpret=None if backend == "xla" else
+        jax.default_backend() != "tpu"))
+
+mesh = make_auto_mesh((8,), ("model",))
+"""
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_sharded_store_parity_random_sequence(backend):
+    """Random ingest/event/evict/re-ingest sequence (forcing growth and slot
+    recycling on both stores): every surviving user's fetched table matches
+    the single-device store, and fetch_many assembles in request order."""
+    out = run_sub(PREAMBLE + f"""
+backend = {backend!r}
+rng = np.random.default_rng(0)
+eng = engine(backend)
+ref = BSEServer(embed, None, eng, wire_dtype=jnp.float32, capacity=4)
+sh = BSEServer(embed, None, eng, wire_dtype=jnp.float32, capacity=4,
+               mesh=mesh)
+live = set()
+for step in range(4):
+    users = rng.choice(40, size=6, replace=False)
+    users = [int(u) for u in users if u not in live]
+    if users:
+        items = rng.integers(0, 64, (len(users), 9))
+        cats = rng.integers(0, 16, (len(users), 9))
+        masks = (rng.uniform(size=(len(users), 9)) > 0.3).astype(np.float32)
+        for s in (ref, sh):
+            s.ingest_histories(users, items, cats, masks)
+        live.update(users)
+    ev_u = [int(u) for u in rng.choice(sorted(live), size=8)]   # repeats OK
+    ei, ec = rng.integers(0, 64, 8), rng.integers(0, 16, 8)
+    for s in (ref, sh):
+        s.ingest_events(ev_u, ei, ec)
+    for u in [int(u) for u in rng.choice(sorted(live), size=2, replace=False)]:
+        for s in (ref, sh):
+            assert s.evict(u)
+        live.discard(u)
+order = sorted(live)
+a = np.asarray(ref.fetch_many(order))
+b = np.asarray(sh.fetch_many(order))
+per = sh.store.per_shard_capacity
+print(json.dumps({{
+    "diff": float(np.abs(a - b).max()),
+    "grows": sh.store.n_grows,
+    "evictions": sh.store.n_evictions,
+    "balanced": max(sh.store.shard_load()) - min(sh.store.shard_load()) <= 3,
+    "free_cover": all(len(f) + l == per for f, l in
+                      zip(sh.store._free, sh.store.shard_load())),
+}}))
+""")
+    d = json.loads(out.splitlines()[-1])
+    assert d["diff"] < 1e-4, d
+    assert d["grows"] >= 1 and d["evictions"] >= 1, d   # sequence exercised both
+    assert d["balanced"] and d["free_cover"], d
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_serve_sharded_matches_single_device(backend):
+    """engine.serve_sharded (batch over the model axis, B not a multiple of
+    the shard count) == engine.serve."""
+    out = run_sub(PREAMBLE + f"""
+eng = engine({backend!r})
+q = jax.random.normal(jax.random.PRNGKey(1), (5, 3, D))
+seq = jax.random.normal(jax.random.PRNGKey(2), (5, 7, D))
+mk = (jax.random.uniform(jax.random.PRNGKey(3), (5, 7)) > 0.3
+      ).astype(jnp.float32)
+a = eng.serve(q, seq, mk)
+b = eng.serve_sharded(q, seq, mk, mesh=mesh)
+c = eng.serve_sharded(q, seq, None, mesh=mesh)      # mask-free path
+d = eng.serve(q, seq, None)
+print(json.dumps({{"diff": float(jnp.max(jnp.abs(a - b))),
+                   "diff_nomask": float(jnp.max(jnp.abs(c - d)))}}))
+""")
+    d = json.loads(out.splitlines()[-1])
+    assert d["diff"] < 1e-4 and d["diff_nomask"] < 1e-4, d
+
+
+def test_sharded_recycle_reads_zero_and_clear():
+    """An evicted-then-recycled slot reads zero on every shard; clear()
+    empties the index and zeroes the sharded array."""
+    out = run_sub(PREAMBLE + """
+from repro.serve.table_store import ShardedTableStore
+store = ShardedTableStore(3, 4, D, mesh, capacity=8)
+h = store.assign(list(range(16)))                   # forces one grow
+store.write(h, jnp.ones((16, 3, 4, D)))
+k, l = store.slot(5)
+assert store.evict(5) and not store.evict(5)
+h2 = store.assign(["fresh"])
+recycled = tuple(int(x) for x in h2[0]) == (k, l)
+zero = float(jnp.abs(store.row("fresh")).max()) == 0.0
+store.clear()
+print(json.dumps({
+    "recycled": recycled, "zero": zero,
+    "cleared": len(store) == 0 and
+        float(jnp.abs(store.data).max()) == 0.0,
+    "grows": store.n_grows, "capacity": store.capacity}))
+""")
+    d = json.loads(out.splitlines()[-1])
+    assert d["recycled"] and d["zero"] and d["cleared"], d
+    assert d["grows"] == 1 and d["capacity"] == 16, d
+
+
+def test_one_shard_mesh_in_process():
+    """A 1-shard mesh runs the full sharded code path on the main process's
+    single device — cheap coverage inside the tier-1 gate."""
+    from repro.distributed.compat import make_auto_mesh
+    from repro.core.engine import EngineConfig, SDIMEngine
+    from repro.serve.bse_server import BSEServer
+
+    D = 16
+    ei = jax.random.normal(jax.random.PRNGKey(11), (64, D // 2))
+    ec = jax.random.normal(jax.random.PRNGKey(12), (16, D // 2))
+    embed = lambda p, i, c: jnp.concatenate(
+        [ei[jnp.asarray(i) % 64], ec[jnp.asarray(c) % 16]], axis=-1)
+    eng = SDIMEngine(EngineConfig(m=12, tau=2, d=D, backend="xla"))
+    mesh = make_auto_mesh((1,), ("model",))
+    ref = BSEServer(embed, None, eng, wire_dtype=jnp.float32, capacity=2)
+    sh = BSEServer(embed, None, eng, wire_dtype=jnp.float32, capacity=2,
+                   mesh=mesh)
+    rng = np.random.default_rng(0)
+    items, cats = rng.integers(0, 64, (3, 9)), rng.integers(0, 16, (3, 9))
+    ev_i, ev_c = rng.integers(0, 64, 3), rng.integers(0, 16, 3)
+    for s in (ref, sh):
+        s.ingest_histories([0, 1, 2], items, cats)          # grow 2 -> 4
+        s.ingest_events([0, 2, 0], ev_i, ev_c)
+    np.testing.assert_allclose(np.asarray(ref.fetch_many([0, 1, 2])),
+                               np.asarray(sh.fetch_many([0, 1, 2])),
+                               rtol=1e-5, atol=1e-5)
+    assert sh.store.n_grows == 1 and sh.store.n_shards == 1
+    q = jax.random.normal(jax.random.PRNGKey(1), (2, 3, D))
+    seq = jax.random.normal(jax.random.PRNGKey(2), (2, 5, D))
+    np.testing.assert_allclose(
+        np.asarray(eng.serve(q, seq)),
+        np.asarray(eng.serve_sharded(q, seq, mesh=mesh)),
+        rtol=1e-5, atol=1e-5)

@@ -1,0 +1,89 @@
+"""Docs gate (``make docs-check``): fails CI when documentation rots.
+
+Two checks, both cheap enough to sit in the default ``test-fast`` path:
+
+  1. every intra-repo markdown link in ``README.md`` / ``docs/*.md`` /
+     ``src/repro/kernels/README.md`` resolves to an existing file
+     (external http(s)/mailto links are ignored; ``#anchors`` stripped);
+  2. every ``.py`` file under ``src/repro/kernels/`` carries a module
+     docstring — the kernel contract (block specs, VMEM residency, ragged
+     padding, oracle pin) lives there, so an undocumented kernel module is
+     a regression.
+
+Exit code 0 = clean; 1 = problems (each printed as ``file: problem``).
+"""
+from __future__ import annotations
+
+import ast
+import glob
+import os
+import re
+import sys
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+# [text](target) — but not images ![...] or http(s)/mailto targets
+_LINK = re.compile(r"(?<!!)\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def doc_files() -> list[str]:
+    return (
+        [os.path.join(ROOT, "README.md")]
+        + sorted(glob.glob(os.path.join(ROOT, "docs", "*.md")))
+        + [os.path.join(ROOT, "src", "repro", "kernels", "README.md")]
+    )
+
+
+def check_links() -> list[str]:
+    problems = []
+    for md in doc_files():
+        if not os.path.exists(md):
+            problems.append(f"{os.path.relpath(md, ROOT)}: file missing")
+            continue
+        text = open(md, encoding="utf-8").read()
+        for target in _LINK.findall(text):
+            if re.match(r"^[a-z][a-z0-9+.-]*:", target):   # http:, mailto:, …
+                continue
+            path = target.split("#", 1)[0]
+            if not path:                                    # pure #anchor
+                continue
+            resolved = os.path.normpath(os.path.join(os.path.dirname(md), path))
+            if not os.path.exists(resolved):
+                problems.append(
+                    f"{os.path.relpath(md, ROOT)}: broken link -> {target}")
+    return problems
+
+
+def check_kernel_docstrings() -> list[str]:
+    problems = []
+    pys = sorted(glob.glob(
+        os.path.join(ROOT, "src", "repro", "kernels", "**", "*.py"),
+        recursive=True))
+    assert pys, "no kernel modules found — wrong ROOT?"
+    for f in pys:
+        try:
+            doc = ast.get_docstring(ast.parse(open(f, encoding="utf-8").read()))
+        except SyntaxError as e:
+            doc = None
+            problems.append(f"{os.path.relpath(f, ROOT)}: unparseable ({e})")
+            continue
+        if not doc or not doc.strip():
+            problems.append(
+                f"{os.path.relpath(f, ROOT)}: missing module docstring")
+    return problems
+
+
+def main() -> int:
+    problems = check_links() + check_kernel_docstrings()
+    for p in problems:
+        print(p)
+    if problems:
+        print(f"docs-check: {len(problems)} problem(s)")
+        return 1
+    print(f"docs-check: OK ({len(doc_files())} markdown files, "
+          "kernel docstrings present)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
