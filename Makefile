@@ -1,10 +1,12 @@
 # Single CI entry point: `make test` is the tier-1 gate, `make bench-smoke`
-# exercises the engine-backend serving benchmark (both backends side by side).
-# `test-fast` skips the slow property/parity suites (no hypothesis needed);
-# `test-full` runs everything, including the hypothesis property tests and
-# interpret-mode kernel parity (hypothesis optional — see requirements-dev).
-# `docs-check` verifies intra-repo doc links + kernel docstrings; it rides
-# in the default test-fast / ci paths.
+# runs EVERY benchmarks/*.py module at pipeline-proof depth (training
+# benchmarks shrink to a few dozen steps; the serving benchmark covers both
+# engine backends, the sharded store and the tiered capacity-pressure
+# section). `test-fast` skips the slow property/parity suites (no hypothesis
+# needed); `test-full` runs everything, including the hypothesis property
+# tests and interpret-mode kernel parity (hypothesis optional — see
+# requirements-dev). `docs-check` verifies intra-repo doc links + kernel
+# docstrings; it rides in the default test-fast / ci paths.
 PYTHONPATH := src
 
 .PHONY: test test-fast test-full bench-smoke docs-check ci
@@ -19,7 +21,7 @@ test-full:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -q
 
 bench-smoke:
-	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --only table5
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --smoke
 
 docs-check:
 	python tools/docs_check.py

@@ -34,21 +34,24 @@ def estimator_error(m: int, tau: int = 3, trials: int = 8) -> float:
     return float(np.mean(errs))
 
 
-def run(quick: bool = True):
+def run(quick: bool = True, smoke: bool = False):
+    """``smoke``: pipeline-proof depth only (AUCs not meaningful)."""
     rows = []
     tau = 3
+    steps = (60 if smoke else 400) if quick else 1500
+    ev = 1024 if smoke else 4096
     for m in MS:
-        err = estimator_error(m, tau)
+        err = estimator_error(m, tau, trials=2 if smoke else 8)
         rows.append({"name": f"fig5/estimator_err_m{m}", "us_per_call": 0.0,
                      "derived": f"cos_dist_to_Eq14={err:.4f};groups={m // tau}"})
-    train_ms = [12, 48] if quick else [12, 24, 48, 96]
+    train_ms = ([48] if smoke else [12, 48]) if quick else [12, 24, 48, 96]
     for m in train_ms:
-        r = train_and_eval("sdim", steps=400 if quick else 1500, batch=128,
-                           eval_examples=4096, lr=5e-3, m=m, tau=tau)
+        r = train_and_eval("sdim", steps=steps, batch=128,
+                           eval_examples=ev, lr=5e-3, m=m, tau=tau)
         rows.append({"name": f"fig5/auc_m{m}", "us_per_call": r["us_per_step"],
                      "derived": f"auc={r['auc']}"})
-    r_inf = train_and_eval("sdim_expected", steps=400 if quick else 1500,
-                           batch=128, eval_examples=4096, lr=5e-3)
+    r_inf = train_and_eval("sdim_expected", steps=steps,
+                           batch=128, eval_examples=ev, lr=5e-3)
     rows.append({"name": "fig5/auc_m_inf_eq14", "us_per_call": r_inf["us_per_step"],
                  "derived": f"auc={r_inf['auc']}_(m->inf_limit)"})
     return rows

@@ -1,7 +1,12 @@
 """Benchmark harness — one module per paper table/figure.
 
 Usage:
-    PYTHONPATH=src python -m benchmarks.run [--full] [--only table1,...]
+    PYTHONPATH=src python -m benchmarks.run [--full|--smoke] [--only table1,...]
+
+``--smoke`` (the ``make bench-smoke`` CI gate) runs EVERY module at
+pipeline-proof depth: training benchmarks shrink to a few dozen steps, so
+the whole suite finishes in minutes — numbers exist but are not meaningful;
+the point is that no benchmark is rotten.
 
 Prints ``name,us_per_call,shards,derived`` CSV (plus a roofline summary read
 from the dry-run artifacts, if present). ``shards`` is the device count the
@@ -57,10 +62,16 @@ def roofline_rows() -> list[dict]:
 
 
 def main() -> None:
+    import inspect
+
     p = argparse.ArgumentParser()
     p.add_argument("--full", action="store_true", help="long training runs")
+    p.add_argument("--smoke", action="store_true",
+                   help="pipeline-proof depth: every module, minutes total")
     p.add_argument("--only", default=None)
     args = p.parse_args()
+    if args.full and args.smoke:
+        p.error("--full and --smoke are mutually exclusive")
     todo = args.only.split(",") if args.only else ALL
 
     print("name,us_per_call,shards,derived")
@@ -68,7 +79,10 @@ def main() -> None:
     for name in todo:
         t0 = time.time()
         try:
-            rows = _module(name).run(quick=not args.full)
+            run = _module(name).run
+            kw = ({"smoke": True} if args.smoke and
+                  "smoke" in inspect.signature(run).parameters else {})
+            rows = run(quick=not args.full, **kw)
             for r in rows:
                 print(f"{r['name']},{r['us_per_call']:.1f},"
                       f"{r.get('shards', '-')},{r['derived']}")

@@ -26,13 +26,17 @@ BASELINES = [
 ]
 
 
-def run(quick: bool = True):
-    steps = 600 if quick else 2000
+def run(quick: bool = True, smoke: bool = False):
+    """``smoke`` (make bench-smoke / run.py --smoke): every baseline still
+    trains end to end, but only long enough to prove the pipeline runs —
+    AUCs are NOT meaningful at smoke depth, only that they exist."""
+    steps = (60 if smoke else 600) if quick else 2000
     rows = []
     aucs = {}
     for kind, kw in BASELINES:
         r = train_and_eval(kind, steps=steps, batch=128,
-                           eval_examples=4096 if quick else 16384,
+                           eval_examples=1024 if smoke else
+                           (4096 if quick else 16384),
                            lr=5e-3, **kw)
         aucs[kind] = r["auc"]
         rows.append({

@@ -10,14 +10,16 @@ from benchmarks.common import train_and_eval
 TAUS = [1, 2, 3, 5, 10]
 
 
-def run(quick: bool = True):
-    steps = 400 if quick else 1500
+def run(quick: bool = True, smoke: bool = False):
+    """``smoke``: pipeline-proof depth only (AUCs not meaningful)."""
+    steps = (60 if smoke else 400) if quick else 1500
     rows = []
     aucs = {}
     for tau in TAUS:
         m = 48 if 48 % tau == 0 else tau * (48 // tau)
         r = train_and_eval("sdim", steps=steps, batch=128,
-                           eval_examples=4096, lr=5e-3, m=m, tau=tau)
+                           eval_examples=1024 if smoke else 4096,
+                           lr=5e-3, m=m, tau=tau)
         aucs[tau] = r["auc"]
         # entropy of the expected attention kernel at this tau (Appendix A)
         cos = np.clip(np.random.default_rng(0).uniform(-0.9, 0.9, 512), -1, 1)

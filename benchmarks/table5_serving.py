@@ -21,9 +21,19 @@ The **sharded** section reports the same store flow against a
 ``ShardedTableStore`` row-sharded over every visible device (the ``shards``
 CSV column): run under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
 to exercise an 8-way host-local mesh on CPU.
+
+The **capacity-pressure** section measures the tiered store
+(``serve/tiered_store.py``): Zipf-distributed traffic over a working set
+4x the device-hot capacity, so every burst promotes from the host warm pool
+/ disk cold segments and demotes under pressure — hit-rate, promote/demote
+bytes and users/sec vs the unbounded store, on both backends. Promote and
+demote are batched per burst (the gather/scatter counters in the derived
+column stay O(#bursts), never O(users)).
 """
 from __future__ import annotations
 
+import shutil
+import tempfile
 import time
 
 import jax
@@ -86,6 +96,7 @@ def run(quick: bool = True):
                             "B_fixed_(L-free,bf16_wire)"})
     rows.extend(throughput_rows(quick))
     rows.extend(sharded_rows(quick))
+    rows.extend(pressure_rows(quick))
     return rows
 
 
@@ -255,4 +266,94 @@ def sharded_rows(quick: bool = True, n_users: int = 512,
                  "us_per_call": 1e6 / ev, "shards": S,
                  "derived": f"sharded={ev:.0f}/s_single={ev1:.0f}/s"
                             f"_capacity_scales_{S}x"})
+    return rows
+
+
+def pressure_rows(quick: bool = True) -> list[dict]:
+    """Capacity-pressure: the tiered store under Zipf traffic whose working
+    set is 4x the hot capacity (the acceptance bound), vs the unbounded
+    single-tier store. The serving path is ``fetch_many`` — the op the CTR
+    server drives — so what's measured is gather + batched promote/demote,
+    never per-user dispatches (the gather/scatter counters prove it)."""
+    import jax.numpy as jnp
+
+    from repro.core.engine import EngineConfig, SDIMEngine
+    from repro.serve.bse_server import BSEServer
+    from repro.serve.tiered_store import TierStats
+
+    d = 16
+    emb_i = jax.random.normal(jax.random.PRNGKey(11), (4000, d // 2))
+    emb_c = jax.random.normal(jax.random.PRNGKey(12), (50, d // 2))
+
+    def embed(params, items, cats):
+        return jnp.concatenate([emb_i[jnp.asarray(items) % 4000],
+                                emb_c[jnp.asarray(cats) % 50]], axis=-1)
+
+    rows = []
+    for backend in ("xla", "pallas"):
+        # interpret-mode Pallas on CPU simulates the kernels in python —
+        # keep its ingest volume bounded in quick mode
+        H = 32 if backend == "xla" or not quick else 16     # hot capacity
+        W = 4 * H                                           # working set
+        L = 64 if backend == "xla" else 32
+        n_bursts = 16
+        eng = SDIMEngine(EngineConfig(
+            m=24, tau=3, d=d, backend=backend,
+            interpret=None if backend == "xla"
+            else jax.default_backend() != "tpu"))
+        tmp = tempfile.mkdtemp(prefix="bse-cold-")
+        try:
+            tiered = BSEServer(embed, None, eng, hot_capacity=H,
+                               warm_capacity=2 * H, store_dir=tmp,
+                               policy="clock")
+            flat = BSEServer(embed, None, eng, capacity=W)
+            rng = np.random.default_rng(0)
+            hist_i = rng.integers(0, 4000, (W, L))
+            hist_c = rng.integers(0, 50, (W, L))
+            for lo in range(0, W, H):                       # batched bootstrap
+                us = list(range(lo, lo + H))
+                for s in (tiered, flat):
+                    s.ingest_histories(us, hist_i[lo:lo + H],
+                                       hist_c[lo:lo + H])
+            # Zipf(1.1) over the working set: a hot head the size of the
+            # hot tier, a long tail that lives warm/cold
+            p = 1.0 / (np.arange(1, W + 1) ** 1.1)
+            p /= p.sum()
+            bursts = [[int(u) for u in rng.choice(W, size=H, p=p)]
+                      for _ in range(n_bursts)]
+            for s in (tiered, flat):                        # warm the jits
+                s.fetch_many(bursts[0])
+            tiered.store.stats = TierStats()                # serving-only
+            t0 = time.perf_counter()
+            for b in bursts:
+                jax.block_until_ready(tiered.fetch_many(b))
+            tiered_ups = n_bursts * H / (time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            for b in bursts:
+                jax.block_until_ready(flat.fetch_many(b))
+            flat_ups = n_bursts * H / (time.perf_counter() - t0)
+            ts = tiered.store.stats
+            tiers = tiered.store.tier_sizes()
+        finally:
+            shutil.rmtree(tmp, ignore_errors=True)
+        tag = f"pressure[{backend}]"
+        rows.append({
+            "name": f"table5/{tag}/users_per_sec",
+            "us_per_call": 1e6 / tiered_ups, "shards": 1,
+            "derived": f"tiered={tiered_ups:.0f}/s_unbounded={flat_ups:.0f}/s"
+                       f"_hot={H}_working_set={W}_zipf1.1"})
+        rows.append({
+            "name": f"table5/{tag}/hit_rate",
+            "us_per_call": 0.0, "shards": 1,
+            "derived": f"hit_rate={ts.hit_rate:.2f}"
+                       f"_promote={ts.warm_promotions + ts.cold_promotions}"
+                       f"(cold={ts.cold_promotions})_demote={ts.demotions}"
+                       f"_tiers={tiers}".replace(" ", "")})
+        rows.append({
+            "name": f"table5/{tag}/bytes_moved",
+            "us_per_call": 0.0, "shards": 1,
+            "derived": f"promote={ts.promote_bytes}B_demote={ts.demote_bytes}B"
+                       f"_spill={ts.spill_bytes}B_hot_gathers="
+                       f"{ts.n_hot_gathers}_hot_scatters={ts.n_hot_scatters}"
+                       f"_bursts={n_bursts}"})
     return rows

@@ -8,6 +8,10 @@ over a device mesh's model axis. On a CPU host, fake the devices first:
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
         python -m repro.launch.serve --arch sdim-paper --shards 8
+
+``--hot-capacity K --store-dir D --policy clock`` swaps in the tiered store
+(serve/tiered_store.py): at most K users stay device-resident, the rest
+demote to a host pool and spill to ``.npz`` segments under D.
 """
 from __future__ import annotations
 
@@ -23,26 +27,43 @@ from repro.configs import registry
 from repro.core.engine import BACKENDS
 
 
-def build_mesh(shards: int, mesh_spec: str = None):
+def build_mesh(shards: int, mesh_spec: str = None, err=None):
     """``--mesh "2x4"`` ((data, model) axes) or ``--shards N`` ((model,)
     only) -> a ``MeshCtx`` over host-local devices; ``None`` when serving
-    unsharded. The table store shards over the model axis."""
-    if not mesh_spec and shards <= 1:
-        return None
+    unsharded. The table store shards over the model axis.
+
+    Flag validation goes through ``err`` (``parser.error`` when called from
+    ``main``) — not ``assert`` — so bad flags fail with a usable message
+    even under ``python -O``."""
+
+    def fail(msg: str):
+        if err is not None:
+            err(msg)                       # parser.error raises SystemExit
+        raise SystemExit(f"error: {msg}")
+
+    if mesh_spec:
+        try:
+            dims = tuple(int(x) for x in mesh_spec.lower().split("x"))
+        except ValueError:
+            dims = ()
+        if len(dims) != 2 or min(dims) < 1:
+            fail(f'--mesh wants "DxM" (two positive ints, e.g. "2x4"), '
+                 f"got {mesh_spec!r}")
+        shape, axes = dims, ("data", "model")
+    else:
+        if shards < 1:
+            fail(f"--shards must be a positive device count, got {shards}")
+        if shards == 1:
+            return None
+        shape, axes = (shards,), ("model",)
+    if math.prod(shape) > len(jax.devices()):
+        fail(f"mesh {shape} needs {math.prod(shape)} devices, have "
+             f"{len(jax.devices())}; on CPU set "
+             f"XLA_FLAGS=--xla_force_host_platform_device_count="
+             f"{math.prod(shape)}")
     from repro.distributed.compat import make_auto_mesh
     from repro.distributed.mesh_ctx import MeshCtx
 
-    if mesh_spec:
-        dims = tuple(int(x) for x in mesh_spec.lower().split("x"))
-        assert len(dims) == 2, f"--mesh wants DxM, got {mesh_spec!r}"
-        shape, axes = dims, ("data", "model")
-    else:
-        shape, axes = (shards,), ("model",)
-    if math.prod(shape) > len(jax.devices()):
-        raise SystemExit(
-            f"mesh {shape} needs {math.prod(shape)} devices, have "
-            f"{len(jax.devices())}; on CPU set "
-            f"XLA_FLAGS=--xla_force_host_platform_device_count={math.prod(shape)}")
     return MeshCtx(make_auto_mesh(shape, axes))
 
 
@@ -63,17 +84,46 @@ def main():
     p.add_argument("--mesh", default=None,
                    help='explicit mesh shape "DxM" (data x model); '
                         "overrides --shards")
+    p.add_argument("--hot-capacity", type=int, default=None,
+                   help="tier the BSE store: at most this many users stay "
+                        "device-resident; the rest demote to a host pool "
+                        "(and to --store-dir segments)")
+    p.add_argument("--store-dir", default=None,
+                   help="cold-tier directory for spilled .npz segments "
+                        "(enables the disk tier)")
+    p.add_argument("--policy", default=None, choices=("clock", "lru"),
+                   help="hot-tier eviction policy (default clock)")
+    p.add_argument("--warm-capacity", type=int, default=None,
+                   help="bound the host warm pool; overflow spills to "
+                        "--store-dir")
     p.add_argument("--tokens", type=int, default=32, help="LM decode steps")
     p.add_argument("--sdim-kv", action="store_true",
                    help="LM: SDIM bucket-compressed KV decode")
     args = p.parse_args()
 
+    from repro.serve.tiered_store import DEFAULT_HOT_CAPACITY, is_tiered
+
     mod = registry.get(args.arch)
     cfg = mod.SMOKE
+    tiered = is_tiered(args.hot_capacity, args.store_dir, args.policy,
+                       args.warm_capacity)
     if mod.FAMILY != "recsys" and (args.mesh or args.shards > 1):
-        raise SystemExit(
-            f"--shards/--mesh shard the BSE table store (recsys serving "
-            f"only); arch {args.arch!r} is family {mod.FAMILY!r}")
+        p.error(f"--shards/--mesh shard the BSE table store (recsys serving "
+                f"only); arch {args.arch!r} is family {mod.FAMILY!r}")
+    if mod.FAMILY != "recsys" and tiered:
+        p.error(f"--hot-capacity/--store-dir/--policy tier the BSE table "
+                f"store (recsys serving only); arch {args.arch!r} is family "
+                f"{mod.FAMILY!r}")
+    if tiered:
+        # the implicit bound when --store-dir/--policy tier the store
+        # without an explicit --hot-capacity
+        hot_eff = (DEFAULT_HOT_CAPACITY if args.hot_capacity is None
+                   else args.hot_capacity)
+        if args.micro_batch > hot_eff:
+            p.error(f"--micro-batch {args.micro_batch} exceeds the hot-tier "
+                    f"capacity {hot_eff}"
+                    f"{' (default)' if args.hot_capacity is None else ''}: "
+                    f"a burst can touch at most hot-capacity distinct users")
     if mod.FAMILY == "recsys":
         from repro.data.synthetic import SyntheticCTRConfig, generate_batch
         from repro.models.ctr import CTRModel
@@ -86,12 +136,19 @@ def main():
         params = model.init(jax.random.PRNGKey(0))
         mode = "decoupled" if cfg.interest.kind == "sdim" else "inline"
         if mode != "decoupled" and (args.mesh or args.shards > 1):
-            raise SystemExit(
-                f"--shards/--mesh shard the BSE table store, which only the "
-                f"decoupled (sdim) deployment has; arch {args.arch!r} serves "
-                f"{mode!r}")
-        mesh_ctx = build_mesh(args.shards, args.mesh) if mode == "decoupled" else None
-        server = CTRServer.build(model, params, mode, mesh=mesh_ctx)
+            p.error(f"--shards/--mesh shard the BSE table store, which only "
+                    f"the decoupled (sdim) deployment has; arch "
+                    f"{args.arch!r} serves {mode!r}")
+        if mode != "decoupled" and tiered:
+            p.error(f"--hot-capacity/--store-dir/--policy tier the BSE table "
+                    f"store, which only the decoupled (sdim) deployment has; "
+                    f"arch {args.arch!r} serves {mode!r}")
+        mesh_ctx = (build_mesh(args.shards, args.mesh, err=p.error)
+                    if mode == "decoupled" else None)
+        server = CTRServer.build(model, params, mode, mesh=mesh_ctx,
+                                 hot_capacity=args.hot_capacity,
+                                 store_dir=args.store_dir, policy=args.policy,
+                                 warm_capacity=args.warm_capacity)
         bse = server.bse
         if cfg.interest.kind == "sdim":
             print(f"SDIM engine backend: {model.engine.backend}"
@@ -143,6 +200,14 @@ def main():
         if bse:
             print(f"{server.stats.ms_per_request:.1f} ms/request; "
                   f"table {bse.table_bytes()} B")
+            if tiered:
+                ts = bse.store.stats
+                print(f"tiered store {bse.store.tier_sizes()} "
+                      f"(hot cap {bse.store.hot_capacity}, "
+                      f"policy {bse.store.policy.name}): "
+                      f"hit-rate {ts.hit_rate:.2f}, "
+                      f"promote {ts.promote_bytes} B, "
+                      f"demote {ts.demote_bytes} B")
     elif mod.FAMILY == "lm":
         from repro.models.lm import LMModel
 

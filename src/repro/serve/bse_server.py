@@ -28,10 +28,26 @@ The embedding of raw behavior ids depends on the CTR model's current tables,
 so the server holds an ``embed_fn`` + params snapshot; ``refresh_params``
 models the model-push cycle after each training deployment (the whole store
 is invalidated — index emptied, array zeroed — and re-encoded lazily).
+
+Storage backends (the ``serve/`` storage seam):
+  * default — unbounded ``TableStore`` (grows by doubling);
+  * ``mesh=`` — ``ShardedTableStore`` over the mesh's model axis;
+  * any of ``hot_capacity``/``store_dir``/``policy`` — a ``TieredTableStore``
+    (device-hot / host-warm / disk-cold, see ``serve/tiered_store.py``),
+    composing with ``mesh``. ``snapshot()``/``restore()`` then round-trip
+    the FULL serving state (all tiers + indices + hash family ``R`` +
+    stats): a restarted server answers identically with no re-ingest.
+
+Unknown-user contract: ``fetch_many`` returns an all-zero row for a user no
+tier knows (counted in ``stats.n_misses``) — never a garbage slot gather,
+never an exception; callers that want the user served ingest its history
+first (``CTRServer.handle_requests`` does exactly that).
 """
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 import time
 from typing import Any, Callable, Optional, Sequence
 
@@ -41,6 +57,8 @@ import numpy as np
 
 from repro.core.engine import SDIMEngine
 from repro.serve.table_store import ShardedTableStore, TableStore
+from repro.serve.tiered_store import (TieredTableStore, _atomic_json,
+                                      _atomic_npz, is_tiered)
 
 
 @dataclasses.dataclass
@@ -48,6 +66,7 @@ class BSEStats:
     n_encodes: int = 0
     n_updates: int = 0
     n_fetches: int = 0
+    n_misses: int = 0          # fetches of users the store does not hold
     bytes_transmitted: int = 0
     encode_time_s: float = 0.0
 
@@ -88,19 +107,43 @@ class BSEServer:
         wire_dtype: Any = jnp.bfloat16,
         capacity: int = 64,
         mesh: Any = None,
+        hot_capacity: Optional[int] = None,
+        store_dir: Optional[str] = None,
+        policy: Optional[str] = None,
+        warm_capacity: Optional[int] = None,
+        store: Any = None,
     ):
         """``mesh`` (a Mesh or MeshCtx) shards the table store over the
         mesh's model axis (``ShardedTableStore``): capacity scales with the
         mesh, ingest/fetch stay one dispatch each, event folds go through
         ``SDIMEngine.update_sharded``. ``None`` keeps the single-device
-        ``TableStore``."""
+        ``TableStore``.
+
+        Any of ``hot_capacity`` (device-tier user bound), ``store_dir``
+        (cold-tier segment directory), ``policy`` (``"clock"``/``"lru"``)
+        or ``warm_capacity`` selects the ``TieredTableStore`` instead —
+        bounded HBM, host/disk overflow, snapshot-restore — wrapping the
+        sharded hot tier when ``mesh`` is also given. An explicit ``store``
+        (e.g. from ``TieredTableStore.restore``) overrides all of these."""
         self.embed_fn = embed_fn
         self.params = params
         self.engine = engine
         self.R = engine.R if R is None else R
         self.wire_dtype = jnp.dtype(wire_dtype)
         cfg = engine.cfg
-        if mesh is None:
+        tiered = is_tiered(hot_capacity, store_dir, policy, warm_capacity)
+        if store is not None:
+            assert tuple(store.row_shape) == \
+                (cfg.n_groups, cfg.n_buckets, cfg.d), \
+                (store.row_shape, cfg)
+            self.store = store
+        elif tiered:
+            self.store = TieredTableStore(
+                cfg.n_groups, cfg.n_buckets, cfg.d,
+                hot_capacity=capacity if hot_capacity is None else hot_capacity,
+                mesh=mesh, policy=policy or "clock", store_dir=store_dir,
+                warm_capacity=warm_capacity)
+        elif mesh is None:
             self.store = TableStore(cfg.n_groups, cfg.n_buckets, cfg.d,
                                     capacity=capacity)
         else:
@@ -138,7 +181,9 @@ class BSEServer:
         tables.block_until_ready()
         self.stats.encode_time_s += time.perf_counter() - t0
         self.stats.n_encodes += len(users)
-        self.store.write(self.store.assign(users), tables)
+        # assign_fresh: every row is overwritten below, so a tiered store
+        # drops stale warm/cold copies instead of promoting them
+        self.store.write(self.store.assign_fresh(users), tables)
 
     def ingest_event(self, user: Any, item: int, cat: int) -> None:
         """Real-time behavior event: incremental O(m·d) table update (the
@@ -183,10 +228,14 @@ class BSEServer:
     # ------------------------------------------------------------------
     def fetch(self, user: Any) -> Optional[jax.Array]:
         """CTR-server fetch: cast to the wire dtype and account exactly the
-        bytes of the array that crosses the wire."""
-        table = self.store.row(user)
-        if table is None:
+        bytes of the array that crosses the wire. Unknown user -> ``None``
+        (counted in ``stats.n_misses``). A single fetch is a burst of one:
+        on a tiered store it promotes the user and touches the eviction
+        policy exactly like ``fetch_many`` (no silent cold-tier re-reads)."""
+        if user not in self.store:
+            self.stats.n_misses += 1
             return None
+        table = self.store.rows(self.store.slots([user]))[0]
         wire = table.astype(self.wire_dtype)
         self.stats.n_fetches += 1
         self.stats.bytes_transmitted += wire.size * self.wire_dtype.itemsize
@@ -194,10 +243,19 @@ class BSEServer:
 
     def fetch_many(self, users: Sequence[Any]) -> jax.Array:
         """Batched fetch: ONE gather -> (B, G, U, d) in the wire dtype.
-        Raises KeyError on unknown users (callers ingest first). Bytes are
+        A user the store does not hold gets an ALL-ZERO row and bumps
+        ``stats.n_misses`` — never a garbage slot gather, never an
+        exception (callers that need the user served ingest first). On a
+        tiered store, warm/cold users are batch-promoted and hit. Bytes are
         accounted for the array actually returned."""
-        wire = self.store.rows(self.store.slots(users)).astype(self.wire_dtype)
+        slots, present = self.store.lookup(users)
+        rows = self.store.rows(slots)
+        misses = len(users) - int(present.sum())
+        if misses:
+            rows = rows * jnp.asarray(present, rows.dtype)[:, None, None, None]
+        wire = rows.astype(self.wire_dtype)
         self.stats.n_fetches += len(users)
+        self.stats.n_misses += misses
         self.stats.bytes_transmitted += wire.size * self.wire_dtype.itemsize
         return wire
 
@@ -205,3 +263,40 @@ class BSEServer:
         if len(self.store) == 0:
             return 0
         return int(np.prod(self.store.row_shape)) * self.wire_dtype.itemsize
+
+    # ------------------------------------------------------------------
+    # snapshot / restore (tiered store only — the durable deployment)
+    # ------------------------------------------------------------------
+    def snapshot(self, dir: str) -> str:
+        """Persist the FULL serving state under ``dir``: every tier of the
+        store (arrays + user indices + eviction recency + tier stats) plus
+        the hash family ``R``, the wire dtype and the serving stats. A
+        server restored from it answers identically with no re-ingest."""
+        if not isinstance(self.store, TieredTableStore):
+            raise TypeError(
+                "snapshot() needs the tiered store (pass hot_capacity=/"
+                "store_dir=/policy= when building the BSEServer)")
+        self.store.snapshot(dir)
+        _atomic_npz(os.path.join(dir, "server.npz"), R=np.asarray(self.R))
+        _atomic_json(os.path.join(dir, "server.json"),
+                     {"wire_dtype": str(self.wire_dtype),
+                      "stats": dataclasses.asdict(self.stats)})
+        return dir
+
+    @classmethod
+    def restore(cls, dir: str, embed_fn: Callable, params: Any,
+                engine: SDIMEngine, mesh: Any = None,
+                store_dir: Optional[str] = None) -> "BSEServer":
+        """Rebuild a server from ``snapshot(dir)``: tiers, indices, policy
+        state, stats and ``R`` all come from disk — only the embed fn,
+        params and engine (code, not state) are supplied by the caller. A
+        sharded snapshot needs a ``mesh`` with the same shard count."""
+        store = TieredTableStore.restore(dir, mesh=mesh, store_dir=store_dir)
+        with np.load(os.path.join(dir, "server.npz")) as z:
+            R = jnp.asarray(z["R"])
+        with open(os.path.join(dir, "server.json")) as f:
+            meta = json.load(f)
+        srv = cls(embed_fn, params, engine, R=R,
+                  wire_dtype=jnp.dtype(meta["wire_dtype"]), store=store)
+        srv.stats = BSEStats(**meta["stats"])
+        return srv

@@ -56,25 +56,40 @@ class CTRServer:
     @classmethod
     def build(cls, model: CTRModel, params: Any, mode: str = "decoupled",
               *, mesh: Any = None, capacity: int = 64,
-              wire_dtype: Any = jnp.bfloat16) -> "CTRServer":
+              wire_dtype: Any = jnp.bfloat16, hot_capacity: int = None,
+              store_dir: str = None, policy: str = None,
+              warm_capacity: int = None) -> "CTRServer":
         """Mesh-aware construction of the whole serving pair: wires the
         model's behavior-embedding fn and checkpointed hash family ``R``
         into a ``BSEServer`` (decoupled mode), sharding its table store over
-        ``mesh``'s model axis when a Mesh/MeshCtx is given. Every launcher
-        and benchmark builds through here so the embed/R plumbing lives in
-        one place."""
+        ``mesh``'s model axis when a Mesh/MeshCtx is given. Any of
+        ``hot_capacity``/``store_dir``/``policy``/``warm_capacity`` selects
+        the tiered store (bounded device tier + host/disk overflow +
+        snapshot-restore; see serve/tiered_store.py) — the request path is
+        unchanged, ``fetch_many`` just promotes through the tiers. Every
+        launcher and benchmark builds through here so the embed/R plumbing
+        lives in one place."""
+        from repro.serve.tiered_store import is_tiered
+
         bse = None
+        tiered = is_tiered(hot_capacity, store_dir, policy, warm_capacity)
         if mode != "decoupled" and mesh is not None:
             raise ValueError(
                 f"mesh shards the BSE table store, which only the decoupled "
                 f"deployment has (mode={mode!r})")
+        if mode != "decoupled" and tiered:
+            raise ValueError(
+                f"hot_capacity/store_dir/policy tier the BSE table store, "
+                f"which only the decoupled deployment has (mode={mode!r})")
         if mode == "decoupled":
             embed = lambda p, i, c: model._embed_behaviors(
                 p, jnp.asarray(i), jnp.asarray(c))
             bse = BSEServer(embed, params, model.engine,
                             R=params["interest"]["buffers"]["R"],
                             wire_dtype=wire_dtype, capacity=capacity,
-                            mesh=mesh)
+                            mesh=mesh, hot_capacity=hot_capacity,
+                            store_dir=store_dir, policy=policy,
+                            warm_capacity=warm_capacity)
         return cls(model, params, bse, mode=mode)
 
     def __init__(self, model: CTRModel, params: Any,

@@ -91,6 +91,14 @@ class TableStore:
             raise KeyError(f"users not in table store: {missing}")
         return np.asarray([self._slot_of[u] for u in users], np.int32)
 
+    def lookup(self, users: Sequence[Any]) -> tuple[np.ndarray, np.ndarray]:
+        """Miss-tolerant ``slots``: ``(slots, present)`` where unknown users
+        get slot 0 (always a valid gather index) and ``present=False`` — the
+        caller masks their rows to zero (the ``fetch_many`` contract)."""
+        present = np.asarray([u in self._slot_of for u in users], bool)
+        slots = np.asarray([self._slot_of.get(u, 0) for u in users], np.int32)
+        return slots, present
+
     def assign(self, users: Sequence[Any]) -> np.ndarray:
         """Slots for ``users``, allocating for unknown ones (growing the
         device array by doubling when the free list runs dry). Duplicate
@@ -108,6 +116,12 @@ class TableStore:
             slots.append(s)
         return np.asarray(slots, np.int32)
 
+    def assign_fresh(self, users: Sequence[Any]) -> np.ndarray:
+        """``assign`` for callers about to overwrite every row wholesale
+        (full re-encode). Here it's an alias; the tiered store overrides it
+        to skip promoting row data that would be thrown away."""
+        return self.assign(users)
+
     def _grow(self) -> None:
         cap = self.capacity
         self.data = jnp.concatenate([self.data, jnp.zeros_like(self.data)])
@@ -116,23 +130,35 @@ class TableStore:
 
     def evict(self, user: Any) -> bool:
         """Drop a user; the zeroed slot is recycled by the next allocation."""
-        s = self._slot_of.pop(user, None)
-        if s is None:
-            return False
-        del self._user_of[s]
+        return self.evict_many([user]) == 1
+
+    def evict_many(self, users: Sequence[Any]) -> int:
+        """Batched evict: all known users' slots zeroed in ONE scatter (the
+        tiered store's demotion path must never pay per-user dispatches) and
+        recycled. Unknown users are ignored, duplicates deduped; returns
+        the evicted count."""
+        known = [u for u in dict.fromkeys(users) if u in self._slot_of]
+        if not known:
+            return 0
+        slots = self.slots(known)
         # recycled slots must read zero
-        self.data = _scatter_set(self.data, np.array([s], np.int32),
-                                 jnp.zeros((1, *self.row_shape), self.dtype))
-        self._free.append(s)
-        self.n_evictions += 1
-        return True
+        self.write(slots, jnp.zeros((len(known), *self.row_shape), self.dtype))
+        for u in known:
+            s = self._slot_of.pop(u)
+            del self._user_of[s]
+            self._free.append(s)
+        self.n_evictions += len(known)
+        return len(known)
 
     def clear(self) -> None:
-        """Invalidate everything (model push): index emptied, array zeroed."""
+        """Invalidate everything (model push): index emptied, array zeroed,
+        growth/eviction counters reset — the store is as-new."""
         self._slot_of.clear()
         self._user_of.clear()
         self._free = list(range(self.capacity - 1, -1, -1))
         self.data = jnp.zeros_like(self.data)
+        self.n_grows = 0
+        self.n_evictions = 0
 
     # ------------------------------------------------------------------
     # rows
@@ -149,6 +175,27 @@ class TableStore:
         """One scatter: overwrite (B,) slots with rows (B, G, U, d)."""
         self.data = _scatter_set(self.data, jnp.asarray(slots, jnp.int32),
                                  rows.astype(self.dtype))
+
+    # ------------------------------------------------------------------
+    # serialization seam (tiered snapshot/restore)
+    # ------------------------------------------------------------------
+    def host_state(self) -> dict:
+        """Full store state as host objects: the device array (one D2H copy)
+        plus the user→slot index as a json-able list of pairs."""
+        return {"data": np.asarray(self.data),
+                "index": [[u, int(s)] for u, s in self._slot_of.items()]}
+
+    def load_host_state(self, state: dict) -> None:
+        """Inverse of ``host_state``: replaces array + index wholesale. The
+        free list is rebuilt as the complement of the indexed slots, so a
+        restored store allocates exactly like the snapshotted one."""
+        data = np.asarray(state["data"])
+        assert data.shape[1:] == self.row_shape, (data.shape, self.row_shape)
+        self.data = jnp.asarray(data, self.dtype)
+        self._slot_of = {u: int(s) for u, s in state["index"]}
+        self._user_of = {s: u for u, s in self._slot_of.items()}
+        self._free = [s for s in range(self.capacity - 1, -1, -1)
+                      if s not in self._user_of]
 
 
 # ---------------------------------------------------------------------------
@@ -288,6 +335,15 @@ class ShardedTableStore:
             raise KeyError(f"users not in table store: {missing}")
         return np.asarray([self._slot_of[u] for u in users], np.int32)
 
+    def lookup(self, users: Sequence[Any]) -> tuple[np.ndarray, np.ndarray]:
+        """Miss-tolerant ``slots``: ``(handles, present)`` where unknown
+        users get handle (0, 0) and ``present=False`` — the caller masks
+        their rows to zero (the ``fetch_many`` contract)."""
+        present = np.asarray([u in self._slot_of for u in users], bool)
+        slots = np.asarray([self._slot_of.get(u, (0, 0)) for u in users],
+                           np.int32)
+        return slots, present
+
     def assign(self, users: Sequence[Any]) -> np.ndarray:
         """(B, 2) handles for ``users``, allocating unknown ones on the
         least-loaded shard (growing every shard by doubling when all free
@@ -304,6 +360,10 @@ class ShardedTableStore:
             self._user_of[s] = u
         return np.asarray([self._slot_of[u] for u in users], np.int32)
 
+    def assign_fresh(self, users: Sequence[Any]) -> np.ndarray:
+        """``assign`` for full-overwrite callers (see ``TableStore``)."""
+        return self.assign(users)
+
     def grow(self) -> None:
         per = self.per_shard_capacity
         self.data = self._grow_op(self.data)
@@ -313,24 +373,35 @@ class ShardedTableStore:
 
     def evict(self, user: Any) -> bool:
         """Drop a user; the zeroed slot is recycled by the next allocation."""
-        s = self._slot_of.pop(user, None)
-        if s is None:
-            return False
-        del self._user_of[s]
-        self.write(np.asarray([s], np.int32),
-                   jnp.zeros((1, *self.row_shape), self.dtype))
-        self._free[s[0]].append(s[1])
-        self.n_evictions += 1
-        return True
+        return self.evict_many([user]) == 1
+
+    def evict_many(self, users: Sequence[Any]) -> int:
+        """Batched evict: all known users' slots zeroed in ONE sharded
+        scatter and recycled. Unknown users are ignored, duplicates
+        deduped; returns the evicted count."""
+        known = [u for u in dict.fromkeys(users) if u in self._slot_of]
+        if not known:
+            return 0
+        self.write(self.slots(known),
+                   jnp.zeros((len(known), *self.row_shape), self.dtype))
+        for u in known:
+            s = self._slot_of.pop(u)
+            del self._user_of[s]
+            self._free[s[0]].append(s[1])
+        self.n_evictions += len(known)
+        return len(known)
 
     def clear(self) -> None:
-        """Invalidate everything (model push): index emptied, array zeroed."""
+        """Invalidate everything (model push): index emptied, array zeroed,
+        growth/eviction counters reset — the store is as-new."""
         per = self.per_shard_capacity
         self._slot_of.clear()
         self._user_of.clear()
         self._free = [list(range(per - 1, -1, -1))
                       for _ in range(self.n_shards)]
         self.data = jax.device_put(jnp.zeros_like(self.data), self._sharding)
+        self.n_grows = 0
+        self.n_evictions = 0
 
     # ------------------------------------------------------------------
     # rows
@@ -349,3 +420,29 @@ class ShardedTableStore:
         slots = jnp.asarray(slots, jnp.int32)
         self.data = self._scatter(self.data, slots[:, 0], slots[:, 1],
                                   rows.astype(self.dtype))
+
+    # ------------------------------------------------------------------
+    # serialization seam (tiered snapshot/restore)
+    # ------------------------------------------------------------------
+    def host_state(self) -> dict:
+        """Full store state as host objects: the (S, C, G, U, d) array (one
+        D2H copy) plus the user→(shard, local) index as json-able pairs."""
+        return {"data": np.asarray(self.data),
+                "index": [[u, [int(s[0]), int(s[1])]]
+                          for u, s in self._slot_of.items()]}
+
+    def load_host_state(self, state: dict) -> None:
+        """Inverse of ``host_state``. The array must match this store's
+        shard count; per-shard free lists are rebuilt as the complement of
+        the indexed handles."""
+        data = np.asarray(state["data"])
+        assert data.shape[0] == self.n_shards, (data.shape, self.n_shards)
+        assert data.shape[2:] == self.row_shape, (data.shape, self.row_shape)
+        self.data = jax.device_put(jnp.asarray(data, self.dtype),
+                                   self._sharding)
+        self._slot_of = {u: (int(s[0]), int(s[1])) for u, s in state["index"]}
+        self._user_of = {s: u for u, s in self._slot_of.items()}
+        per = self.per_shard_capacity
+        self._free = [[l for l in range(per - 1, -1, -1)
+                       if (k, l) not in self._user_of]
+                      for k in range(self.n_shards)]

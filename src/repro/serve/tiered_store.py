@@ -1,0 +1,799 @@
+"""Tiered BSE state store — device-hot / host-warm / disk-cold (§4.4 at
+production scale).
+
+The paper's deployment only works because BSE state lives in a persistent
+KV store decoupled from the CTR server: "millions of users" cannot fit one
+device's HBM, and a process restart must not lose serving state. MIMN
+(arXiv:1905.09248) and SIM (arXiv:2006.05639) draw the same conclusion for
+lifelong-behavior serving — a bounded hot memory backed by a larger,
+durable, decoupled store. ``TieredTableStore`` is that subsystem:
+
+  * **hot tier** — the existing device-resident ``TableStore`` (or
+    ``ShardedTableStore`` on a mesh), but *bounded*: capacity is fixed at
+    ``hot_capacity`` users and the store never grows. Which users stay hot
+    is decided by a pluggable ``EvictionPolicy`` (``"clock"`` — one-bit
+    second-chance, the classic KV-cache policy — or ``"lru"``);
+  * **warm tier** — a host ``np.ndarray`` pool (``WarmPool``) with its own
+    slot index and amortized-doubling growth. Demoted rows land here: out
+    of HBM but one ``memcpy`` from being served again;
+  * **cold tier** — on-disk ``.npz`` segments (``ColdStore``), written with
+    the atomic tmp-file + ``os.replace`` idiom of ``train/checkpoint.py``.
+    When the warm pool exceeds ``warm_capacity``, its oldest rows spill to
+    a new segment; fully-dead segments are unlinked.
+
+Movement between tiers is **batched**: one burst of B users costs at most
+one hot gather (demotion read), one hot zero-scatter (slot recycle) and one
+hot write-scatter (promotion) — never a per-user device dispatch, so
+``BSEServer.fetch_many`` / ``ingest_events`` stay single-dispatch on the
+hot path. ``TierStats.n_hot_gathers`` / ``n_hot_scatters`` count the
+batched device ops so tests can *prove* that bound.
+
+``snapshot(dir)`` / ``restore(dir)`` round-trip the entire store — all
+three tiers, every user index, the eviction policy's recency state and the
+tier stats — so a restarted server answers bit-identically without
+re-ingesting a single history (``BSEServer.snapshot`` adds the hash family
+``R`` and serving stats on top).
+
+The store is compute-free, like the stores it fronts: callers produce rows
+via ``SDIMEngine.encode``/``update`` and only route memory through here.
+User keys must be JSON-serializable scalars (int or str) — they are
+persisted in segment files and snapshot manifests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import glob
+import json
+import os
+import shutil
+from typing import Any, Iterator, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.table_store import ShardedTableStore, TableStore
+
+
+# ---------------------------------------------------------------------------
+# checkpoint.py idiom: never leave a half-written file in place
+# ---------------------------------------------------------------------------
+def _atomic_npz(path: str, **arrays) -> None:
+    tmp = f"{path}.tmp-{os.getpid()}"
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+def _atomic_json(path: str, obj) -> None:
+    tmp = f"{path}.tmp-{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump(obj, f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+# ---------------------------------------------------------------------------
+# eviction policies
+# ---------------------------------------------------------------------------
+class EvictionPolicy:
+    """Tracks hot-tier residents and picks demotion victims.
+
+    The tiered store calls ``insert`` when a user becomes hot, ``touch`` on
+    every access, ``remove`` when a user leaves the hot tier, and
+    ``victims(k, exclude)`` to choose k users to demote — ``exclude`` pins
+    the current burst (a user about to be served must never be its own
+    victim). ``state()``/``load_state()`` round-trip the recency state
+    through snapshots as JSON-able lists.
+    """
+
+    name = "base"
+
+    def insert(self, user: Any) -> None:
+        raise NotImplementedError
+
+    def touch(self, user: Any) -> None:
+        raise NotImplementedError
+
+    def remove(self, user: Any) -> None:
+        raise NotImplementedError
+
+    def victims(self, k: int, exclude=()) -> list:
+        raise NotImplementedError
+
+    def state(self) -> dict:
+        raise NotImplementedError
+
+    def load_state(self, state: dict) -> None:
+        raise NotImplementedError
+
+
+class LRUPolicy(EvictionPolicy):
+    """Exact least-recently-used (dict insertion order = recency order)."""
+
+    name = "lru"
+
+    def __init__(self):
+        self._order: dict[Any, None] = {}
+
+    def insert(self, user):
+        self._order[user] = None
+
+    def touch(self, user):
+        if user in self._order:
+            del self._order[user]
+            self._order[user] = None
+
+    def remove(self, user):
+        self._order.pop(user, None)
+
+    def victims(self, k, exclude=()):
+        out = [u for u in self._order if u not in exclude][:k]
+        if len(out) < k:
+            raise RuntimeError(
+                f"need {k} victims but only {len(out)} evictable hot users")
+        return out
+
+    def state(self):
+        return {"order": list(self._order)}
+
+    def load_state(self, state):
+        self._order = {u: None for u in state["order"]}
+
+
+class ClockPolicy(EvictionPolicy):
+    """CLOCK (one-bit second chance): O(1) touch — no list reshuffling on
+    the hot path, which is why production KV caches prefer it over exact
+    LRU. A hand sweeps a ring of hot users; referenced users get their bit
+    cleared and one more round, unreferenced ones are victims.
+
+    Ring cells are ``[user, alive]`` entries tracked per user, so ``remove``
+    kills exactly one cell and a later re-insert (demote → re-promote, the
+    common Zipf hot-head path) cannot revive the stale tombstone — the user
+    gets a genuinely fresh second chance. Dead cells are popped lazily by
+    the sweep."""
+
+    name = "clock"
+
+    def __init__(self):
+        self._ring: list[list] = []           # [user, alive] cells
+        self._cell: dict[Any, list] = {}      # user -> its live cell
+        self._ref: dict[Any, int] = {}
+        self._hand = 0
+
+    def insert(self, user):
+        assert user not in self._cell, f"user {user!r} already tracked"
+        cell = [user, True]
+        self._ring.append(cell)
+        self._cell[user] = cell
+        self._ref[user] = 1
+
+    def touch(self, user):
+        if user in self._ref:
+            self._ref[user] = 1
+
+    def remove(self, user):
+        cell = self._cell.pop(user, None)
+        if cell is not None:
+            cell[1] = False                   # tombstone: popped lazily
+        self._ref.pop(user, None)
+
+    def victims(self, k, exclude=()):
+        evictable = sum(1 for u in self._ref if u not in exclude)
+        if evictable < k:
+            raise RuntimeError(
+                f"need {k} victims but only {evictable} evictable hot users")
+        out, chosen = [], set()
+        steps = 0
+        limit = 3 * len(self._ring) + k + 8    # 2 sweeps always suffice
+        while len(out) < k:
+            steps += 1
+            assert steps <= limit, "CLOCK sweep failed to terminate"
+            if self._hand >= len(self._ring):
+                self._hand = 0
+            u, alive = self._ring[self._hand]
+            if not alive or u in chosen:
+                self._ring.pop(self._hand)     # tombstone: drop, don't advance
+            elif u in exclude:
+                self._hand += 1
+            elif self._ref[u]:
+                self._ref[u] = 0               # second chance
+                self._hand += 1
+            else:
+                out.append(u)
+                chosen.add(u)
+                self._hand += 1
+        return out
+
+    def state(self):
+        ordered = self._ring[self._hand:] + self._ring[:self._hand]
+        return {"order": [[u, int(self._ref[u])]
+                          for u, alive in ordered if alive]}
+
+    def load_state(self, state):
+        self._ring = [[u, True] for u, _ in state["order"]]
+        self._cell = {cell[0]: cell for cell in self._ring}
+        self._ref = {u: int(r) for u, r in state["order"]}
+        self._hand = 0
+
+
+POLICIES = {"lru": LRUPolicy, "clock": ClockPolicy}
+
+# the hot-tier bound used when tiering is requested without an explicit
+# hot_capacity (mirrors TableStore's default capacity)
+DEFAULT_HOT_CAPACITY = 64
+
+
+def is_tiered(hot_capacity=None, store_dir=None, policy=None,
+              warm_capacity=None) -> bool:
+    """The one predicate for "did the caller ask for the tiered store" —
+    shared by ``BSEServer``, ``CTRServer.build`` and the launcher so the
+    layers can never diverge on which knobs enable tiering."""
+    return any(v is not None
+               for v in (hot_capacity, store_dir, policy, warm_capacity))
+
+
+def make_policy(policy) -> EvictionPolicy:
+    if isinstance(policy, EvictionPolicy):
+        return policy
+    if policy not in POLICIES:
+        raise ValueError(f"unknown eviction policy {policy!r}; "
+                         f"have {sorted(POLICIES)}")
+    return POLICIES[policy]()
+
+
+# ---------------------------------------------------------------------------
+# warm tier: host ndarray pool
+# ---------------------------------------------------------------------------
+class WarmPool:
+    """Host-memory row pool: one (N, G, U, d) ``np.ndarray`` + user→slot
+    index with amortized-doubling growth — the same layout discipline as
+    the device ``TableStore``, minus the device. Insertion order of the
+    index doubles as demotion age, which is what ``oldest`` (the spill
+    order) reads."""
+
+    def __init__(self, row_shape, dtype, capacity: int = 64):
+        self.row_shape = tuple(row_shape)
+        self.dtype = np.dtype(dtype)
+        self.data = np.zeros((max(1, capacity), *self.row_shape), self.dtype)
+        self._slot_of: dict[Any, int] = {}
+        self._free = list(range(self.data.shape[0] - 1, -1, -1))
+
+    def __len__(self) -> int:
+        return len(self._slot_of)
+
+    def __contains__(self, user) -> bool:
+        return user in self._slot_of
+
+    def users(self) -> Iterator[Any]:
+        return iter(self._slot_of)
+
+    def put(self, users: Sequence[Any], rows: np.ndarray) -> None:
+        assert len(users) == len(rows), (len(users), rows.shape)
+        while len(self._free) < len(users):
+            n = self.data.shape[0]
+            self.data = np.concatenate([self.data, np.zeros_like(self.data)])
+            self._free[:0] = range(2 * n - 1, n - 1, -1)
+        for u, row in zip(users, rows):
+            assert u not in self._slot_of, f"user {u!r} already warm"
+            s = self._free.pop()
+            self._slot_of[u] = s
+            self.data[s] = row
+
+    def take(self, users: Sequence[Any]) -> np.ndarray:
+        """Remove ``users`` and return their rows (B, G, U, d)."""
+        slots = [self._slot_of.pop(u) for u in users]
+        rows = self.data[np.asarray(slots, np.int64)].copy()
+        self._free.extend(slots)
+        return rows
+
+    def peek(self, user) -> Optional[np.ndarray]:
+        s = self._slot_of.get(user)
+        return None if s is None else self.data[s]
+
+    def oldest(self, k: int) -> list:
+        return list(self._slot_of)[:k]
+
+    def clear(self) -> None:
+        self._slot_of.clear()
+        self._free = list(range(self.data.shape[0] - 1, -1, -1))
+        self.data[:] = 0
+
+    # ---- snapshot seam -------------------------------------------------
+    def host_state(self) -> dict:
+        return {"data": self.data,
+                "index": [[u, int(s)] for u, s in self._slot_of.items()]}
+
+    def load_host_state(self, state: dict) -> None:
+        data = np.asarray(state["data"])
+        assert data.shape[1:] == self.row_shape, (data.shape, self.row_shape)
+        self.data = np.array(data, self.dtype)
+        self._slot_of = {u: int(s) for u, s in state["index"]}
+        used = set(self._slot_of.values())
+        self._free = [s for s in range(self.data.shape[0] - 1, -1, -1)
+                      if s not in used]
+
+
+# ---------------------------------------------------------------------------
+# cold tier: on-disk .npz segments
+# ---------------------------------------------------------------------------
+class ColdStore:
+    """Append-only ``.npz`` segments under ``dir`` + an in-memory
+    user→(segment, row) index. One spill = one segment file (rows + a JSON
+    user list, so segments are self-describing), written atomically. Rows
+    removed by promotion/eviction go dead in place; a segment whose live
+    count hits zero is unlinked."""
+
+    def __init__(self, dir: str):
+        self.dir = dir
+        os.makedirs(dir, exist_ok=True)
+        self._seg_of: dict[Any, tuple[int, int]] = {}
+        self._live: dict[int, int] = {}
+        existing = [int(os.path.basename(p)[4:-4])
+                    for p in glob.glob(os.path.join(dir, "seg_*.npz"))]
+        self._next = max(existing, default=-1) + 1
+
+    def _path(self, seg: int) -> str:
+        return os.path.join(self.dir, f"seg_{seg:08d}.npz")
+
+    def __len__(self) -> int:
+        return len(self._seg_of)
+
+    def __contains__(self, user) -> bool:
+        return user in self._seg_of
+
+    def users(self) -> Iterator[Any]:
+        return iter(self._seg_of)
+
+    @property
+    def n_segments(self) -> int:
+        return len(self._live)
+
+    def spill(self, users: Sequence[Any], rows: np.ndarray) -> None:
+        assert len(users) == len(rows), (len(users), rows.shape)
+        seg = self._next
+        self._next += 1
+        _atomic_npz(self._path(seg), rows=np.asarray(rows),
+                    users=np.asarray(json.dumps(list(users))))
+        for i, u in enumerate(users):
+            assert u not in self._seg_of, f"user {u!r} already cold"
+            self._seg_of[u] = (seg, i)
+        self._live[seg] = len(users)
+
+    def load_remove(self, users: Sequence[Any]) -> np.ndarray:
+        """Promote: read ``users``' rows (each touched segment loaded once)
+        and drop them from the index."""
+        by_seg: dict[int, list] = {}
+        for u in users:
+            seg, r = self._seg_of[u]
+            by_seg.setdefault(seg, []).append((u, r))
+        rows = {}
+        for seg, entries in by_seg.items():
+            with np.load(self._path(seg)) as z:
+                data = z["rows"]
+                for u, r in entries:
+                    rows[u] = np.array(data[r])
+        self.remove(users)
+        return np.stack([rows[u] for u in users])
+
+    def remove(self, users: Sequence[Any]) -> None:
+        for u in users:
+            seg, _ = self._seg_of.pop(u)
+            self._live[seg] -= 1
+            if self._live[seg] == 0:
+                del self._live[seg]
+                try:
+                    os.remove(self._path(seg))
+                except OSError:
+                    pass
+
+    def clear(self) -> None:
+        for seg in list(self._live):
+            try:
+                os.remove(self._path(seg))
+            except OSError:
+                pass
+        self._seg_of.clear()
+        self._live.clear()
+
+    # ---- snapshot seam -------------------------------------------------
+    def index_state(self) -> list:
+        return [[u, int(s), int(r)] for u, (s, r) in self._seg_of.items()]
+
+    def load_index_state(self, index: list) -> None:
+        self._seg_of = {u: (int(s), int(r)) for u, s, r in index}
+        self._live = {}
+        for seg, _ in self._seg_of.values():
+            self._live[seg] = self._live.get(seg, 0) + 1
+        for seg in self._live:
+            assert os.path.exists(self._path(seg)), \
+                f"cold index references missing segment {self._path(seg)}"
+        self._next = max(self._live, default=self._next - 1) + 1
+
+
+# ---------------------------------------------------------------------------
+# stats
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class TierStats:
+    """Per-unique-user-per-batch tier accounting, plus the batched-device-op
+    counters that pin the no-per-user-dispatch invariant."""
+
+    hot_hits: int = 0           # user already hot when a batch touched it
+    warm_promotions: int = 0    # warm -> hot
+    cold_promotions: int = 0    # cold -> hot
+    demotions: int = 0          # hot -> warm
+    spills: int = 0             # warm -> cold
+    misses: int = 0             # user in no tier (lookup only)
+    promote_bytes: int = 0      # bytes written hot-ward (warm/cold -> hot)
+    demote_bytes: int = 0       # bytes read off the hot tier on demotion
+    spill_bytes: int = 0        # bytes written to cold segments
+    n_hot_gathers: int = 0      # batched device gathers (demotion reads)
+    n_hot_scatters: int = 0     # batched device scatters (recycle + promote)
+
+    @property
+    def hit_rate(self) -> float:
+        seen = (self.hot_hits + self.warm_promotions + self.cold_promotions
+                + self.misses)
+        return self.hot_hits / seen if seen else 1.0
+
+
+# ---------------------------------------------------------------------------
+# the tiered store
+# ---------------------------------------------------------------------------
+class TieredTableStore:
+    """Bounded hot ``TableStore``/``ShardedTableStore`` + ``WarmPool`` +
+    ``ColdStore``, presenting the same surface the ``BSEServer`` already
+    speaks (``assign``/``lookup``/``rows``/``write``/``data``/…), so the
+    serving stack routes through it transparently.
+
+    Residency protocol: every batched op first calls ``_ensure_resident``,
+    which partitions the burst's unique users by tier, demotes victims
+    (policy-chosen, burst-pinned) if the hot tier lacks room, and promotes
+    warm/cold users — all in ≤1 hot gather + ≤2 hot scatters per burst.
+    A burst may touch at most ``hot_capacity`` distinct users.
+
+    ``warm_capacity=None`` lets the warm pool grow unboundedly (no cold
+    spills even when ``store_dir`` is set); with ``store_dir=None`` there is
+    no cold tier and the warm pool is always unbounded.
+    """
+
+    def __init__(self, n_groups: int, n_buckets: int, d: int,
+                 hot_capacity: int = DEFAULT_HOT_CAPACITY,
+                 dtype: Any = jnp.float32,
+                 mesh: Any = None, policy="clock",
+                 store_dir: Optional[str] = None,
+                 warm_capacity: Optional[int] = None):
+        assert hot_capacity >= 1
+        if mesh is None:
+            self.hot = TableStore(n_groups, n_buckets, d,
+                                  capacity=hot_capacity, dtype=dtype)
+        else:
+            self.hot = ShardedTableStore(n_groups, n_buckets, d, mesh,
+                                         capacity=hot_capacity, dtype=dtype)
+        # sharded capacity rounds up to S * ceil(hot_capacity / S)
+        self.hot_capacity = self.hot.capacity
+        self.warm = WarmPool(self.hot.row_shape, self.hot.dtype,
+                             capacity=self.hot_capacity)
+        self.cold = None if store_dir is None else ColdStore(store_dir)
+        self.warm_capacity = warm_capacity
+        self.policy = make_policy(policy)
+        self.stats = TierStats()
+
+    # ------------------------------------------------------------------
+    # delegated surface
+    # ------------------------------------------------------------------
+    @property
+    def sharded(self) -> bool:
+        return self.hot.sharded
+
+    @property
+    def mesh_ctx(self):
+        return self.hot.mesh_ctx
+
+    @property
+    def n_shards(self) -> int:
+        return self.hot.n_shards       # sharded hot tier only
+
+    @property
+    def row_shape(self):
+        return self.hot.row_shape
+
+    @property
+    def dtype(self):
+        return self.hot.dtype
+
+    @property
+    def data(self):
+        return self.hot.data
+
+    @data.setter
+    def data(self, value) -> None:
+        self.hot.data = value
+
+    @property
+    def capacity(self) -> int:
+        """Device (hot-tier) capacity — the HBM footprint bound."""
+        return self.hot.capacity
+
+    def __len__(self) -> int:
+        return len(self.hot) + len(self.warm) + \
+            (0 if self.cold is None else len(self.cold))
+
+    def __contains__(self, user) -> bool:
+        return self.tier(user) is not None
+
+    def users(self) -> Iterator[Any]:
+        yield from self.hot.users()
+        yield from self.warm.users()
+        if self.cold is not None:
+            yield from self.cold.users()
+
+    def tier(self, user) -> Optional[str]:
+        if user in self.hot:
+            return "hot"
+        if user in self.warm:
+            return "warm"
+        if self.cold is not None and user in self.cold:
+            return "cold"
+        return None
+
+    def tier_sizes(self) -> dict[str, int]:
+        return {"hot": len(self.hot), "warm": len(self.warm),
+                "cold": 0 if self.cold is None else len(self.cold)}
+
+    # ------------------------------------------------------------------
+    # residency engine: batched promote / demote
+    # ------------------------------------------------------------------
+    def _ensure_resident(self, users: Sequence[Any], create: bool) -> None:
+        uniq = list(dict.fromkeys(users))
+        hot_u, warm_u, cold_u, new_u = [], [], [], []
+        for u in uniq:
+            t = self.tier(u)
+            if t == "hot":
+                hot_u.append(u)
+            elif t == "warm":
+                warm_u.append(u)
+            elif t == "cold":
+                cold_u.append(u)
+            elif create:
+                new_u.append(u)
+            else:
+                self.stats.misses += 1
+        need = len(warm_u) + len(cold_u) + len(new_u)
+        if len(hot_u) + need > self.hot_capacity:
+            raise ValueError(
+                f"burst touches {len(hot_u) + need} distinct users but the "
+                f"hot tier holds {self.hot_capacity}; split the burst or "
+                f"raise hot_capacity")
+        self.stats.hot_hits += len(hot_u)
+        for u in hot_u:
+            self.policy.touch(u)
+        if not need:
+            return
+        free = self.hot_capacity - len(self.hot)
+        if free < need:
+            self._demote(need - free, pinned=set(uniq))
+        promote = warm_u + cold_u
+        if promote:
+            parts = []
+            if warm_u:
+                parts.append(self.warm.take(warm_u))
+            if cold_u:
+                parts.append(self.cold.load_remove(cold_u))
+            rows = parts[0] if len(parts) == 1 else np.concatenate(parts)
+            # ONE scatter promotes the whole batch
+            self.hot.write(self.hot.assign(promote), jnp.asarray(rows))
+            self.stats.n_hot_scatters += 1
+            self.stats.warm_promotions += len(warm_u)
+            self.stats.cold_promotions += len(cold_u)
+            self.stats.promote_bytes += rows.nbytes
+        if new_u:
+            self.hot.assign(new_u)     # fresh slots read zero; no device op
+        for u in promote + new_u:
+            self.policy.insert(u)
+        # spill AFTER promotion: a burst user freshly classified warm must
+        # never ride a demotion-triggered spill to cold mid-batch
+        self._spill_overflow()
+        # the hot tier is bounded: residency accounting above must have kept
+        # the store from ever growing
+        assert self.hot.capacity == self.hot_capacity, \
+            (self.hot.capacity, self.hot_capacity)
+
+    def _demote(self, k: int, pinned: set) -> None:
+        victims = self.policy.victims(k, exclude=pinned)
+        vrows = np.asarray(self.hot.rows(self.hot.slots(victims)))  # 1 gather
+        self.stats.n_hot_gathers += 1
+        self.hot.evict_many(victims)                           # 1 zero-scatter
+        self.stats.n_hot_scatters += 1
+        for v in victims:
+            self.policy.remove(v)
+        self.warm.put(victims, vrows)
+        self.stats.demotions += k
+        self.stats.demote_bytes += vrows.nbytes
+
+    def _spill_overflow(self) -> None:
+        if self.warm_capacity is None or self.cold is None:
+            return
+        excess = len(self.warm) - self.warm_capacity
+        if excess > 0:
+            old = self.warm.oldest(excess)
+            rows = self.warm.take(old)
+            self.cold.spill(old, rows)
+            self.stats.spills += excess
+            self.stats.spill_bytes += rows.nbytes
+
+    # ------------------------------------------------------------------
+    # TableStore surface (residency-aware)
+    # ------------------------------------------------------------------
+    def assign(self, users: Sequence[Any]) -> np.ndarray:
+        """Hot slots for ``users`` — promoting, demoting and allocating as
+        needed. Fresh users read all-zero; duplicates share one slot."""
+        self._ensure_resident(users, create=True)
+        return self.hot.assign(users)       # all resident: pure index lookup
+
+    def assign_fresh(self, users: Sequence[Any]) -> np.ndarray:
+        """``assign`` for callers about to overwrite every row wholesale
+        (``ingest_histories``' full re-encode): warm/cold copies of these
+        users are DROPPED instead of promoted — no segment read, no
+        promotion scatter for row data the caller throws away."""
+        uniq = list(dict.fromkeys(users))
+        stale_warm = [u for u in uniq if u in self.warm]
+        if stale_warm:
+            self.warm.take(stale_warm)           # discard rows
+        if self.cold is not None:
+            stale_cold = [u for u in uniq if u in self.cold]
+            if stale_cold:
+                self.cold.remove(stale_cold)
+        return self.assign(users)                # now hot-or-new only
+
+    def slots(self, users: Sequence[Any]) -> np.ndarray:
+        """Hot slots of known users (promoted first); KeyError on unknown."""
+        self._ensure_resident(users, create=False)
+        return self.hot.slots(users)
+
+    def lookup(self, users: Sequence[Any]) -> tuple[np.ndarray, np.ndarray]:
+        """Miss-tolerant ``slots``: known users are promoted to hot, unknown
+        ones get slot 0 with ``present=False`` (the ``fetch_many`` zero-row
+        contract; the miss is counted in ``stats.misses``)."""
+        self._ensure_resident(users, create=False)
+        return self.hot.lookup(users)
+
+    def rows(self, slots) -> jax.Array:
+        return self.hot.rows(slots)
+
+    def row(self, user) -> Optional[jax.Array]:
+        """Read-only peek across all tiers — no promotion, no recency touch
+        (debug/back-compat surface; the serving path is ``lookup``+``rows``)."""
+        t = self.tier(user)
+        if t == "hot":
+            return self.hot.row(user)
+        if t == "warm":
+            return jnp.asarray(self.warm.peek(user))
+        if t == "cold":
+            seg, r = self.cold._seg_of[user]
+            with np.load(self.cold._path(seg)) as z:
+                return jnp.asarray(np.array(z["rows"][r]))
+        return None
+
+    def write(self, slots, rows: jax.Array) -> None:
+        self.hot.write(slots, rows)
+
+    def evict(self, user) -> bool:
+        """Drop a user from whichever tier holds it (true deletion — the
+        user is gone from the store, not demoted)."""
+        t = self.tier(user)
+        if t == "hot":
+            self.policy.remove(user)
+            return self.hot.evict(user)
+        if t == "warm":
+            self.warm.take([user])
+            return True
+        if t == "cold":
+            self.cold.remove([user])
+            return True
+        return False
+
+    def clear(self) -> None:
+        """Invalidate everything (model push): all tiers emptied, cold
+        segments unlinked, policy and stats reset."""
+        self.hot.clear()
+        self.warm.clear()
+        if self.cold is not None:
+            self.cold.clear()
+        self.policy = make_policy(self.policy.name)
+        self.stats = TierStats()
+
+    # ------------------------------------------------------------------
+    # snapshot / restore
+    # ------------------------------------------------------------------
+    def snapshot(self, dir: str) -> str:
+        """Write the complete store state under ``dir``: ``tiers.npz`` (hot
+        + warm arrays), ``manifest.json`` (indices, policy recency state,
+        stats, config) and ``cold/seg_*.npz`` (live segments copied; a
+        segment already inside ``dir`` is left in place). Every file lands
+        atomically. Returns ``dir``."""
+        os.makedirs(dir, exist_ok=True)
+        hot_state = self.hot.host_state()
+        warm_state = self.warm.host_state()
+        _atomic_npz(os.path.join(dir, "tiers.npz"),
+                    hot=hot_state["data"], warm=warm_state["data"])
+        cold_index = []
+        if self.cold is not None:
+            cold_dir = os.path.join(dir, "cold")
+            os.makedirs(cold_dir, exist_ok=True)
+            cold_index = self.cold.index_state()
+            for seg in sorted({s for s, _ in self.cold._seg_of.values()}):
+                src = self.cold._path(seg)
+                dst = os.path.join(cold_dir, os.path.basename(src))
+                if os.path.normpath(src) != os.path.normpath(dst):
+                    tmp = f"{dst}.tmp-{os.getpid()}"
+                    shutil.copyfile(src, tmp)
+                    os.replace(tmp, dst)
+        manifest = {
+            "row_shape": list(self.row_shape),
+            "dtype": str(self.dtype),
+            "sharded": self.sharded,
+            "n_shards": self.hot.n_shards if self.sharded else 1,
+            "hot_capacity": self.hot_capacity,
+            "warm_capacity": self.warm_capacity,
+            "has_cold": self.cold is not None,
+            "policy": {"name": self.policy.name,
+                       "state": self.policy.state()},
+            "stats": dataclasses.asdict(self.stats),
+            "hot_index": hot_state["index"],
+            "warm_index": warm_state["index"],
+            "cold_index": cold_index,
+        }
+        _atomic_json(os.path.join(dir, "manifest.json"), manifest)
+        return dir
+
+    @classmethod
+    def restore(cls, dir: str, mesh: Any = None,
+                store_dir: Optional[str] = None) -> "TieredTableStore":
+        """Rebuild a store from ``snapshot(dir)``. A sharded snapshot needs
+        a ``mesh`` with the same shard count. By default the snapshot's own
+        ``cold/`` directory becomes the live cold store (the snapshot IS the
+        durable state); pass ``store_dir`` to relocate (segments copied)."""
+        with open(os.path.join(dir, "manifest.json")) as f:
+            man = json.load(f)
+        if man["sharded"] and mesh is None:
+            raise ValueError("snapshot was sharded; restore needs a mesh")
+        if not man["sharded"] and mesh is not None:
+            raise ValueError("snapshot was single-device; mesh given")
+        G, U, d = man["row_shape"]
+        target = None
+        if man["has_cold"]:
+            src_dir = os.path.join(dir, "cold")
+            target = store_dir or src_dir
+            if os.path.normpath(target) != os.path.normpath(src_dir):
+                os.makedirs(target, exist_ok=True)
+                for u, seg, _ in man["cold_index"]:
+                    name = f"seg_{int(seg):08d}.npz"
+                    dst = os.path.join(target, name)
+                    if not os.path.exists(dst):
+                        tmp = f"{dst}.tmp-{os.getpid()}"
+                        shutil.copyfile(os.path.join(src_dir, name), tmp)
+                        os.replace(tmp, dst)
+        elif store_dir is not None:
+            target = store_dir
+        store = cls(G, U, d, hot_capacity=man["hot_capacity"],
+                    dtype=man["dtype"], mesh=mesh,
+                    policy=man["policy"]["name"], store_dir=target,
+                    warm_capacity=man["warm_capacity"])
+        if man["sharded"] and store.hot.n_shards != man["n_shards"]:
+            raise ValueError(f"snapshot has {man['n_shards']} shards, mesh "
+                             f"has {store.hot.n_shards}")
+        with np.load(os.path.join(dir, "tiers.npz")) as z:
+            store.hot.load_host_state({"data": z["hot"],
+                                       "index": man["hot_index"]})
+            store.warm.load_host_state({"data": z["warm"],
+                                        "index": man["warm_index"]})
+        if man["has_cold"] and man["cold_index"]:
+            store.cold.load_index_state(man["cold_index"])
+        store.policy.load_state(man["policy"]["state"])
+        store.stats = TierStats(**man["stats"])
+        return store

@@ -128,7 +128,9 @@ print(json.dumps({{"diff": float(jnp.max(jnp.abs(a - b))),
 
 def test_sharded_recycle_reads_zero_and_clear():
     """An evicted-then-recycled slot reads zero on every shard; clear()
-    empties the index and zeroes the sharded array."""
+    empties the index, zeroes the sharded array, resets the grow/evict
+    counters, and the store is reusable: re-ingesting the same history
+    after clear() reproduces the pre-clear tables exactly."""
     out = run_sub(PREAMBLE + """
 from repro.serve.table_store import ShardedTableStore
 store = ShardedTableStore(3, 4, D, mesh, capacity=8)
@@ -139,16 +141,26 @@ assert store.evict(5) and not store.evict(5)
 h2 = store.assign(["fresh"])
 recycled = tuple(int(x) for x in h2[0]) == (k, l)
 zero = float(jnp.abs(store.row("fresh")).max()) == 0.0
+grows_before = store.n_grows
+evs_before = store.n_evictions
+before = np.asarray(store.rows(store.slots([0, 7])))
 store.clear()
+cleared = (len(store) == 0 and float(jnp.abs(store.data).max()) == 0.0)
+stats_reset = store.n_grows == 0 and store.n_evictions == 0
+store.write(store.assign([0, 7]), jnp.ones((2, 3, 4, D)))  # reuse after clear
+after = np.asarray(store.rows(store.slots([0, 7])))
 print(json.dumps({
-    "recycled": recycled, "zero": zero,
-    "cleared": len(store) == 0 and
-        float(jnp.abs(store.data).max()) == 0.0,
-    "grows": store.n_grows, "capacity": store.capacity}))
+    "recycled": recycled, "zero": zero, "cleared": cleared,
+    "stats_reset": stats_reset,
+    "reuse_parity": bool(np.array_equal(before, after)),
+    "grows_before": grows_before, "evs_before": evs_before,
+    "capacity": store.capacity}))
 """)
     d = json.loads(out.splitlines()[-1])
     assert d["recycled"] and d["zero"] and d["cleared"], d
-    assert d["grows"] == 1 and d["capacity"] == 16, d
+    assert d["stats_reset"] and d["reuse_parity"], d
+    assert d["grows_before"] == 1 and d["evs_before"] == 1, d
+    assert d["capacity"] == 16, d
 
 
 def test_one_shard_mesh_in_process():

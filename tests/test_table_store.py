@@ -76,6 +76,65 @@ def test_store_clear_resets_index_and_data():
     assert float(jnp.sum(jnp.abs(store.data))) == 0.0
 
 
+def test_store_clear_resets_stats_and_recycles_slots():
+    """clear() leaves an as-new store: grow/evict counters back to zero and
+    every slot reusable (the free list covers the full capacity again)."""
+    store = TableStore(3, 4, D, capacity=2)
+    store.assign(["a", "b", "c", "d", "e"])                 # 2 grows
+    store.evict("c")
+    assert store.n_grows == 2 and store.n_evictions == 1
+    store.clear()
+    assert store.n_grows == 0 and store.n_evictions == 0
+    assert len(store._free) == store.capacity == 8
+    slots = store.assign(["x", "y", "z"])
+    assert len(set(map(int, slots))) == 3                   # slots recycled
+
+
+def test_evict_many_single_scatter_and_recycle():
+    """Batched eviction: one call drops B users (unknown ones ignored),
+    zeroes their slots, and the slots recycle on the next allocation."""
+    store = TableStore(3, 4, D, capacity=8)
+    slots = store.assign(list("abcdef"))
+    store.write(slots, jnp.ones((6, 3, 4, D)))
+    # duplicates dedupe (regression: a duplicate used to KeyError AFTER the
+    # batch scatter had zeroed other users' still-indexed rows)
+    assert store.evict_many(["b", "d", "b", "ghost", "f", "f"]) == 3
+    assert store.n_evictions == 3 and len(store) == 3
+    for u in "bdf":
+        assert u not in store
+    fresh = store.assign(["g", "h", "i"])                   # recycled slots
+    assert {int(s) for s in fresh} == {int(slots[1]), int(slots[3]),
+                                       int(slots[5])}
+    np.testing.assert_array_equal(np.asarray(store.rows(fresh)),
+                                  np.zeros((3, 3, 4, D)))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_clear_reuse_parity(backend):
+    """Reuse-after-clear: re-ingesting the same histories + events into a
+    cleared server reproduces the original tables exactly, on both
+    backends (no stale slot, free-list or counter state survives)."""
+    rng = np.random.default_rng(8)
+    items = rng.integers(0, N_ITEMS, (3, 7))
+    cats = rng.integers(0, N_CATS, (3, 7))
+    ev_u = [0, 2, 0]
+    ev_i, ev_c = _random_events(rng, len(ev_u))
+    srv = _server(backend)
+
+    def ingest():
+        srv.ingest_histories([0, 1, 2], items, cats)
+        srv.ingest_events(ev_u, ev_i, ev_c)
+        return {u: np.asarray(srv.tables[u]) for u in range(3)}
+
+    before = ingest()
+    srv.store.clear()
+    assert len(srv.store) == 0
+    assert srv.store.n_grows == 0 and srv.store.n_evictions == 0
+    after = ingest()
+    for u in range(3):
+        np.testing.assert_array_equal(before[u], after[u])
+
+
 # ---------------------------------------------------------------------------
 # equivalence: batched ↔ per-user (deterministic, both backends)
 # ---------------------------------------------------------------------------
@@ -190,8 +249,33 @@ def test_fetch_many_matches_fetch_and_byte_accounting():
     assert srv.stats.n_fetches == 2 * len(users)
     for s, row in zip(singles, many):
         np.testing.assert_array_equal(np.asarray(s), np.asarray(row))
-    with pytest.raises(KeyError):
-        srv.fetch_many([0, 99])
+
+
+def test_fetch_many_unknown_users_get_zero_rows():
+    """The unknown-user contract (regression: this used to raise from the
+    slot index — and a raw slot gather would have served garbage): a user
+    the store does not hold gets an ALL-ZERO row, bumps ``stats.n_misses``,
+    and the known users in the same burst are served untouched."""
+    rng = np.random.default_rng(6)
+    srv = _server()
+    i, c = _random_events(rng, 7)
+    srv.ingest_history("known", i, c)
+    ref = np.asarray(srv.fetch("known"))
+    out = np.asarray(srv.fetch_many(["ghost1", "known", "ghost2"]))
+    np.testing.assert_array_equal(out[0], np.zeros_like(out[0]))
+    np.testing.assert_array_equal(out[2], np.zeros_like(out[2]))
+    np.testing.assert_array_equal(out[1], ref)
+    assert srv.stats.n_misses == 2
+    # the zero rows still crossed the wire: bytes count the whole array
+    assert srv.stats.bytes_transmitted == \
+        (ref.size + out.size) * srv.wire_dtype.itemsize
+    # single-user fetch of an unknown user is an explicit None + miss
+    assert srv.fetch("ghost1") is None and srv.stats.n_misses == 3
+    # an all-unknown burst against an empty store is still well-defined
+    empty = _server()
+    out = np.asarray(empty.fetch_many(["a", "b"]))
+    np.testing.assert_array_equal(out, np.zeros_like(out))
+    assert empty.stats.n_misses == 2
 
 
 def test_eviction_and_refresh_leave_slot_index_consistent():

@@ -1,0 +1,492 @@
+"""Tiered BSE state store (ISSUE 4): device-hot / host-warm / disk-cold.
+
+The load-bearing properties:
+  * **transparency** — a tiered server (hot capacity a fraction of the
+    working set, users bouncing through warm and cold) serves exactly what
+    the unbounded single-tier server serves, on BOTH backends;
+  * **batching** — a burst of B users costs O(1) hot-tier device ops
+    (``TierStats.n_hot_gathers``/``n_hot_scatters``), never O(B);
+  * **snapshot→restore** — a restored server's ``fetch_many`` is
+    bit-identical to the live one across all three tiers, and continued
+    ingest stays in lockstep.
+
+Sharded variants run in SUBPROCESSES on an 8-way host-local mesh (same
+contract as test_sharded_store.py). Policy units and flag validation ride
+along (ISSUE 4 satellites).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import EngineConfig, SDIMEngine
+from repro.serve.bse_server import BSEServer
+from repro.serve.tiered_store import (ClockPolicy, LRUPolicy,
+                                      TieredTableStore, make_policy)
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+D = 16
+N_ITEMS, N_CATS = 64, 16
+_EMB_I = jax.random.normal(jax.random.PRNGKey(11), (N_ITEMS, D // 2))
+_EMB_C = jax.random.normal(jax.random.PRNGKey(12), (N_CATS, D // 2))
+BACKENDS = ["xla", "pallas"]
+
+
+def _embed(params, items, cats):
+    return jnp.concatenate([_EMB_I[jnp.asarray(items) % N_ITEMS],
+                            _EMB_C[jnp.asarray(cats) % N_CATS]], axis=-1)
+
+
+def _engine(backend="xla"):
+    return SDIMEngine(EngineConfig(
+        m=12, tau=2, d=D, backend=backend,
+        interpret=None if backend == "xla" else
+        jax.default_backend() != "tpu"))
+
+
+def _tiered(backend, tmp, hot=4, warm=4, mesh=None, policy="clock"):
+    return BSEServer(_embed, None, _engine(backend), wire_dtype=jnp.float32,
+                     mesh=mesh, hot_capacity=hot, warm_capacity=warm,
+                     store_dir=os.path.join(str(tmp), "cold"), policy=policy)
+
+
+def _unbounded(backend):
+    return BSEServer(_embed, None, _engine(backend), wire_dtype=jnp.float32,
+                     capacity=64)
+
+
+def _ingest_working_set(servers, n_users, chunk, rng, events=True):
+    """Same batched ops against every server in ``servers``."""
+    for lo in range(0, n_users, chunk):
+        us = list(range(lo, min(lo + chunk, n_users)))
+        items = rng.integers(0, N_ITEMS, (len(us), 9))
+        cats = rng.integers(0, N_CATS, (len(us), 9))
+        for s in servers:
+            s.ingest_histories(us, items, cats)
+    if events:
+        ev_u = [int(u) for u in rng.choice(n_users, size=chunk)]
+        ei = rng.integers(0, N_ITEMS, len(ev_u))
+        ec = rng.integers(0, N_CATS, len(ev_u))
+        for s in servers:
+            s.ingest_events(ev_u, ei, ec)
+
+
+# ---------------------------------------------------------------------------
+# eviction policies
+# ---------------------------------------------------------------------------
+def test_lru_policy_order_touch_exclude():
+    p = LRUPolicy()
+    for u in "abcd":
+        p.insert(u)
+    p.touch("a")                        # a becomes most-recent
+    assert p.victims(2) == ["b", "c"]
+    assert p.victims(2, exclude={"b"}) == ["c", "d"]
+    p.remove("b")
+    assert p.victims(3) == ["c", "d", "a"]
+    with pytest.raises(RuntimeError):
+        p.victims(4)                    # only 3 users left
+    st = p.state()
+    q = LRUPolicy()
+    q.load_state(st)
+    assert q.victims(3) == p.victims(3)
+
+
+def test_clock_policy_second_chance_and_tombstones():
+    p = ClockPolicy()
+    for u in "abcd":
+        p.insert(u)
+    # first sweep clears every ref bit, second finds victims in ring order
+    assert p.victims(2) == ["a", "b"]
+    for u in ("a", "b"):
+        p.remove(u)                     # tombstones
+    p.touch("c")                        # c referenced: d goes first
+    assert p.victims(1) == ["d"]
+    p.remove("d")
+    assert p.victims(1, exclude=set()) == ["c"]
+    with pytest.raises(RuntimeError):
+        p.victims(1, exclude={"c"})     # everything evictable is pinned
+    st = p.state()
+    q = ClockPolicy()
+    q.load_state(st)
+    assert sorted(q._ref) == sorted(p._ref)
+
+
+def test_clock_policy_reinsert_gets_fresh_second_chance():
+    """Regression: remove + re-insert (demote -> re-promote, the Zipf
+    hot-head path) used to leave a stale live ring cell sharing the user's
+    ref bit — the just-promoted user could be evicted within one sweep."""
+    p = ClockPolicy()
+    for u in "abcd":
+        p.insert(u)
+    p.remove("a")
+    p.insert("a")                       # back in, all ref bits still set
+    assert p.victims(1) == ["b"]        # NOT the freshly re-promoted "a"
+    p.remove("b")                       # what the store does to victims
+    # and the duplicate must not round-trip through snapshots
+    q = ClockPolicy()
+    q.load_state(p.state())
+    assert sorted(u for u, _ in q.state()["order"]) == ["a", "c", "d"]
+
+
+def test_make_policy_registry():
+    assert isinstance(make_policy("lru"), LRUPolicy)
+    assert isinstance(make_policy("clock"), ClockPolicy)
+    p = ClockPolicy()
+    assert make_policy(p) is p
+    with pytest.raises(ValueError):
+        make_policy("fifo")
+
+
+# ---------------------------------------------------------------------------
+# tier flow: transparency + batching
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", ["clock", "lru"])
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_tiered_serves_like_unbounded(backend, policy, tmp_path):
+    """16 users through a 4-slot hot tier (warm cap 4 -> cold in play):
+    every fetched table matches the unbounded store, and the whole run
+    stays O(#bursts) in hot-tier device ops."""
+    rng = np.random.default_rng(0)
+    srv = _tiered(backend, tmp_path, hot=4, warm=4, policy=policy)
+    ref = _unbounded(backend)
+    _ingest_working_set([srv, ref], 16, 4, rng)
+    ts = srv.store.stats
+    assert ts.demotions > 0 and ts.spills > 0, ts     # all 3 tiers exercised
+    assert srv.store.tier_sizes()["cold"] > 0, srv.store.tier_sizes()
+    n_bursts = 0
+    order = rng.permutation(16)
+    for lo in range(0, 16, 4):                        # bursts <= hot capacity
+        us = [int(u) for u in order[lo:lo + 4]]
+        np.testing.assert_allclose(np.asarray(srv.fetch_many(us)),
+                                   np.asarray(ref.fetch_many(us)),
+                                   rtol=1e-5, atol=1e-5)
+        n_bursts += 1
+    assert ts.cold_promotions > 0, ts                 # fetches promoted from disk
+    # the batching bound: every burst costs at most 1 hot gather (demotion
+    # read) + 2 hot scatters (recycle + promote) — never O(users)
+    assert ts.n_hot_gathers <= n_bursts + 4, ts
+    assert ts.n_hot_scatters <= 2 * (n_bursts + 4), ts
+    assert 0.0 <= ts.hit_rate <= 1.0
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_tiered_events_promote_and_fold(backend, tmp_path):
+    """ingest_events on users living in warm/cold promotes them and folds
+    the deltas exactly like the unbounded store; brand-new users start from
+    a zero table."""
+    rng = np.random.default_rng(1)
+    srv = _tiered(backend, tmp_path, hot=4, warm=4)
+    ref = _unbounded(backend)
+    _ingest_working_set([srv, ref], 12, 4, rng, events=False)
+    # users 0..3 are cold / 4..7 warm / 8..11 hot by now; mix all + a fresh one
+    ev_u = [0, 5, 9, "fresh"]
+    ei = rng.integers(0, N_ITEMS, len(ev_u))
+    ec = rng.integers(0, N_CATS, len(ev_u))
+    for s in (srv, ref):
+        s.ingest_events(ev_u, ei, ec)
+    for lo in range(0, len(ev_u), 4):
+        us = ev_u[lo:lo + 4]
+        np.testing.assert_allclose(np.asarray(srv.fetch_many(us)),
+                                   np.asarray(ref.fetch_many(us)),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_burst_wider_than_hot_capacity_raises(tmp_path):
+    srv = _tiered("xla", tmp_path, hot=2)
+    with pytest.raises(ValueError, match="hot_capacity"):
+        srv.store.assign([0, 1, 2])
+
+
+def test_unknown_users_zero_rows_through_tiers(tmp_path):
+    """The fetch_many unknown-user contract holds on the tiered store too
+    (and promotion of the known users in the same burst still happens)."""
+    rng = np.random.default_rng(2)
+    srv = _tiered("xla", tmp_path, hot=2, warm=2)
+    _ingest_working_set([srv], 6, 2, rng, events=False)
+    assert srv.store.tier(0) == "cold"
+    out = np.asarray(srv.fetch_many([0, "ghost"]))
+    assert srv.stats.n_misses == 1
+    np.testing.assert_array_equal(out[1], np.zeros_like(out[1]))
+    assert float(np.abs(out[0]).max()) > 0                  # promoted + served
+    assert srv.store.tier(0) == "hot"
+
+
+def test_tiered_evict_and_clear(tmp_path):
+    rng = np.random.default_rng(3)
+    srv = _tiered("xla", tmp_path, hot=2, warm=2)
+    _ingest_working_set([srv], 6, 2, rng, events=False)
+    sizes = srv.store.tier_sizes()
+    assert sizes == {"hot": 2, "warm": 2, "cold": 2}
+    # evict one user from each tier: true deletion, not demotion
+    victims = [next(iter(srv.store.hot.users())),
+               next(iter(srv.store.warm.users())),
+               next(iter(srv.store.cold.users()))]
+    for v in victims:
+        assert srv.evict(v) and v not in srv.store
+    assert not srv.evict("ghost")
+    assert len(srv.store) == 3
+    srv.store.clear()
+    assert len(srv.store) == 0
+    assert srv.store.cold.n_segments == 0                   # segments unlinked
+    assert srv.store.stats.demotions == 0                   # stats reset
+    # reusable after clear
+    srv.ingest_histories([0], rng.integers(0, N_ITEMS, (1, 5)),
+                         rng.integers(0, N_CATS, (1, 5)))
+    assert srv.store.tier(0) == "hot"
+
+
+# ---------------------------------------------------------------------------
+# snapshot -> restore
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_snapshot_restore_bit_identical(backend, tmp_path):
+    """The acceptance property: a restored server's fetch_many is
+    BIT-identical to the live server for every user in every tier, its
+    stats/indices round-trip, and continued ingest stays in lockstep."""
+    rng = np.random.default_rng(4)
+    srv = _tiered(backend, tmp_path, hot=4, warm=4)
+    _ingest_working_set([srv], 16, 4, rng)
+    snap = os.path.join(str(tmp_path), "snap")
+    srv.snapshot(snap)
+    rest = BSEServer.restore(snap, _embed, None, _engine(backend))
+    assert rest.store.tier_sizes() == srv.store.tier_sizes()
+    assert rest.store.stats == srv.store.stats
+    assert rest.stats == srv.stats
+    assert rest.store.policy.name == srv.store.policy.name
+    np.testing.assert_array_equal(np.asarray(rest.R), np.asarray(srv.R))
+    order = rng.permutation(16)
+    for lo in range(0, 16, 4):
+        us = [int(u) for u in order[lo:lo + 4]]
+        a = np.asarray(srv.fetch_many(us))
+        b = np.asarray(rest.fetch_many(us))
+        assert np.array_equal(a, b), f"restore diverged on users {us}"
+    # identical future: same events -> same tables (incl. a fresh user)
+    ev_u = [int(order[0]), "fresh"]
+    ei = rng.integers(0, N_ITEMS, 2)
+    ec = rng.integers(0, N_CATS, 2)
+    for s in (srv, rest):
+        s.ingest_events(ev_u, ei, ec)
+    assert np.array_equal(np.asarray(srv.fetch_many(ev_u)),
+                          np.asarray(rest.fetch_many(ev_u)))
+
+
+def test_snapshot_restore_relocates_cold_segments(tmp_path):
+    rng = np.random.default_rng(5)
+    srv = _tiered("xla", tmp_path, hot=2, warm=2)
+    _ingest_working_set([srv], 6, 2, rng, events=False)
+    snap = os.path.join(str(tmp_path), "snap")
+    srv.snapshot(snap)
+    new_dir = os.path.join(str(tmp_path), "cold2")
+    rest = BSEServer.restore(snap, _embed, None, _engine("xla"),
+                             store_dir=new_dir)
+    assert rest.store.cold.dir == new_dir
+    assert len(os.listdir(new_dir)) == rest.store.cold.n_segments > 0
+    us = list(range(6))
+    for lo in range(0, 6, 2):
+        assert np.array_equal(np.asarray(srv.fetch_many(us[lo:lo + 2])),
+                              np.asarray(rest.fetch_many(us[lo:lo + 2])))
+
+
+def test_snapshot_requires_tiered_store():
+    srv = _unbounded("xla")
+    with pytest.raises(TypeError, match="tiered"):
+        srv.snapshot("/tmp/nope")
+
+
+def test_restore_mesh_mismatch_raises(tmp_path):
+    srv = _tiered("xla", tmp_path, hot=2)
+    snap = srv.snapshot(os.path.join(str(tmp_path), "snap"))
+    from repro.distributed.compat import make_auto_mesh
+    mesh = make_auto_mesh((1,), ("model",))
+    with pytest.raises(ValueError, match="single-device"):
+        TieredTableStore.restore(snap, mesh=mesh)
+
+
+# ---------------------------------------------------------------------------
+# sharded (8-way host-local mesh, subprocess)
+# ---------------------------------------------------------------------------
+def run_sub(code: str) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+PREAMBLE = """
+import json, os, tempfile
+import jax, jax.numpy as jnp, numpy as np
+from repro.distributed.compat import make_auto_mesh
+from repro.core.engine import EngineConfig, SDIMEngine
+from repro.serve.bse_server import BSEServer
+
+D = 16
+EI = jax.random.normal(jax.random.PRNGKey(11), (64, D // 2))
+EC = jax.random.normal(jax.random.PRNGKey(12), (16, D // 2))
+def embed(params, items, cats):
+    return jnp.concatenate([EI[jnp.asarray(items) % 64],
+                            EC[jnp.asarray(cats) % 16]], axis=-1)
+
+def engine(backend):
+    return SDIMEngine(EngineConfig(
+        m=12, tau=2, d=D, backend=backend,
+        interpret=None if backend == "xla" else
+        jax.default_backend() != "tpu"))
+
+mesh = make_auto_mesh((8,), ("model",))
+tmp = tempfile.mkdtemp()
+"""
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_sharded_tiered_parity_and_restore(backend):
+    """Tiered store over a ShardedTableStore hot tier: serves like the
+    unbounded single-device store through demote/spill/promote, and
+    snapshot->restore onto the same mesh is bit-identical."""
+    out = run_sub(PREAMBLE + f"""
+backend = {backend!r}
+rng = np.random.default_rng(0)
+eng = engine(backend)
+srv = BSEServer(embed, None, eng, wire_dtype=jnp.float32, mesh=mesh,
+                hot_capacity=8, warm_capacity=8,
+                store_dir=os.path.join(tmp, "cold"))
+ref = BSEServer(embed, None, eng, wire_dtype=jnp.float32, capacity=64)
+for lo in range(0, 24, 8):
+    us = list(range(lo, lo + 8))
+    items = rng.integers(0, 64, (8, 9))
+    cats = rng.integers(0, 16, (8, 9))
+    for s in (srv, ref):
+        s.ingest_histories(us, items, cats)
+ev_u = [0, 5, 23, 0]
+ei, ec = rng.integers(0, 64, 4), rng.integers(0, 16, 4)
+for s in (srv, ref):
+    s.ingest_events(ev_u, ei, ec)
+order = rng.permutation(24)
+diff = 0.0
+for lo in range(0, 24, 8):
+    us = [int(u) for u in order[lo:lo + 8]]
+    a = np.asarray(srv.fetch_many(us))
+    b = np.asarray(ref.fetch_many(us))
+    diff = max(diff, float(np.abs(a - b).max()))
+snap = os.path.join(tmp, "snap")
+srv.snapshot(snap)
+rest = BSEServer.restore(snap, embed, None, eng, mesh=mesh)
+identical = True
+for lo in range(0, 24, 8):
+    us = [int(u) for u in order[lo:lo + 8]]
+    identical = identical and bool(np.array_equal(
+        np.asarray(srv.fetch_many(us)), np.asarray(rest.fetch_many(us))))
+ts = srv.store.stats
+print(json.dumps({{
+    "diff": diff, "identical": identical,
+    "tiers": srv.store.tier_sizes(),
+    "demotions": ts.demotions, "spills": ts.spills,
+    "cold_promotions": ts.cold_promotions,
+    "restored_sharded": rest.store.sharded,
+    "n_shards": rest.store.hot.n_shards,
+}}))
+""")
+    d = json.loads(out.splitlines()[-1])
+    assert d["diff"] < 1e-4, d
+    assert d["identical"], d
+    assert d["demotions"] > 0 and d["spills"] > 0, d     # tiers exercised
+    assert d["cold_promotions"] > 0, d
+    assert d["restored_sharded"] and d["n_shards"] == 8, d
+
+
+# ---------------------------------------------------------------------------
+# CTR server integration + launcher flags
+# ---------------------------------------------------------------------------
+def test_ctr_server_routes_through_tiered_store(tmp_path):
+    """handle_requests against a capacity-2 tiered store returns the same
+    scores as against the unbounded store — promotion is invisible to the
+    request path."""
+    from repro.core.interest import InterestConfig
+    from repro.data.synthetic import SyntheticCTRConfig, generate_batch
+    from repro.models.ctr import CTRModel, CTRConfig
+    from repro.serve.ctr_server import CTRServer
+
+    L = 32
+    cfg = CTRConfig(arch="din", n_items=200, n_cats=20, long_len=L,
+                    short_len=8, mlp_hidden=(16,), embed_dim=8,
+                    interest=InterestConfig(kind="sdim", m=12, tau=2))
+    model = CTRModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tiered = CTRServer.build(model, params, "decoupled", hot_capacity=2,
+                             store_dir=os.path.join(str(tmp_path), "cold"),
+                             warm_capacity=2, wire_dtype=jnp.float32)
+    plain = CTRServer.build(model, params, "decoupled",
+                            wire_dtype=jnp.float32)
+    rng = np.random.default_rng(0)
+    dcfg = SyntheticCTRConfig(hist_len=L, n_items=200, n_cats=20)
+    reqs = []
+    for u in range(6):
+        r = generate_batch(dcfg, 1, u)
+        ub = {k: jnp.asarray(v) for k, v in r.items() if k.startswith("hist")}
+        reqs.append((u, ub,
+                     jnp.asarray(rng.integers(0, 200, 5).astype(np.int32)),
+                     jnp.asarray(rng.integers(0, 20, 5).astype(np.int32)),
+                     jnp.zeros((5, 4))))
+    for lo in (0, 2, 4, 0, 2):           # re-visits hit warm/cold promotions
+        burst = reqs[lo:lo + 2]
+        a = tiered.handle_requests(burst)
+        b = plain.handle_requests(burst)
+        for x, y in zip(a, b):
+            np.testing.assert_allclose(x, y, rtol=1e-5, atol=1e-5)
+    ts = tiered.bse.store.stats
+    assert ts.demotions > 0
+    assert ts.warm_promotions + ts.cold_promotions > 0
+
+
+def test_build_mesh_flag_validation():
+    """ISSUE 4 satellite: build_mesh fails via argparse-style errors (not
+    bare asserts), with usable messages, even under python -O."""
+    from repro.launch.serve import build_mesh
+
+    assert build_mesh(1) is None
+    for shards, spec, frag in [(1, "3x", "--mesh"),
+                               (1, "axb", "--mesh"),
+                               (1, "2x2x2", "--mesh"),
+                               (1, "0x4", "--mesh"),
+                               (0, None, "--shards"),
+                               (-3, None, "--shards")]:
+        with pytest.raises(SystemExit) as e:
+            build_mesh(shards, spec)
+        assert frag in str(e.value), (shards, spec, str(e.value))
+    # device-count overflow names the XLA_FLAGS recipe
+    with pytest.raises(SystemExit) as e:
+        build_mesh(4096)
+    assert "xla_force_host_platform_device_count" in str(e.value)
+    # the err hook (parser.error) is preferred over the raise
+    msgs = []
+
+    def err(m):
+        msgs.append(m)
+        raise SystemExit(2)
+
+    with pytest.raises(SystemExit):
+        build_mesh(1, "bogus", err=err)
+    assert msgs and "--mesh" in msgs[0]
+
+
+def test_launcher_rejects_micro_batch_wider_than_hot_tier():
+    """A burst can touch at most hot-capacity distinct users; the launcher
+    must fail at flag-parse time, not mid-serving — including when tiering
+    is enabled implicitly (no explicit --hot-capacity)."""
+    import subprocess as sp
+
+    for flags in (["--hot-capacity", "4", "--micro-batch", "8"],
+                  ["--store-dir", "/tmp/x-cold", "--micro-batch", "128"]):
+        r = sp.run([sys.executable, "-m", "repro.launch.serve",
+                    "--arch", "sdim-paper"] + flags,
+                   capture_output=True, text=True, timeout=300,
+                   env={**os.environ, "PYTHONPATH": SRC})
+        assert r.returncode == 2, (flags, r.stderr[-500:])
+        assert "hot-tier capacity" in r.stderr, r.stderr[-500:]
