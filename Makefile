@@ -1,15 +1,18 @@
 # Single CI entry point: `make test` is the tier-1 gate, `make bench-smoke`
 # runs EVERY benchmarks/*.py module at pipeline-proof depth (training
 # benchmarks shrink to a few dozen steps; the serving benchmark covers both
-# engine backends, the sharded store and the tiered capacity-pressure
-# section). `test-fast` skips the slow property/parity suites (no hypothesis
+# engine backends, the fused megakernel + int8 quantized variants, the
+# sharded store and the tiered capacity-pressure section) and then gates on
+# `tools/bench_check.py`: table5 must have written a well-formed
+# BENCH_serving.json at the repo root or CI fails.
+# `test-fast` skips the slow property/parity suites (no hypothesis
 # needed); `test-full` runs everything, including the hypothesis property
 # tests and interpret-mode kernel parity (hypothesis optional — see
 # requirements-dev). `docs-check` verifies intra-repo doc links + kernel
 # docstrings; it rides in the default test-fast / ci paths.
 PYTHONPATH := src
 
-.PHONY: test test-fast test-full bench-smoke docs-check ci
+.PHONY: test test-fast test-full bench-smoke bench-check docs-check ci
 
 test:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
@@ -22,6 +25,10 @@ test-full:
 
 bench-smoke:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --smoke
+	python tools/bench_check.py
+
+bench-check:
+	python tools/bench_check.py
 
 docs-check:
 	python tools/docs_check.py

@@ -22,6 +22,18 @@ The **sharded** section reports the same store flow against a
 CSV column): run under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
 to exercise an 8-way host-local mesh on CPU.
 
+The **fused** section measures the single-pass serve megakernel
+(``kernels/sdim_fused_serve`` via ``BSEServer.serve_candidates``) against
+the two-dispatch path (``fetch_many`` gather + model-side ``engine.query``)
+at N users per backend: users/sec and per-burst p50/p95/p99 latency, plus
+the int8-quantized store (same fused path, dequant-in-kernel) and a
+roofline bytes-accessed comparison of the compiled graphs. The **auc**
+section pins quantization quality: a trained CTR model served through the
+int8 fused path must match the fp32 unfused oracle's AUC on held-out
+graded synthetic data. Both sections feed ``BENCH_serving.json`` at the
+repo root (schema checked by ``tools/bench_check.py`` — ``make ci`` fails
+if it is missing or malformed).
+
 The **capacity-pressure** section measures the tiered store
 (``serve/tiered_store.py``): Zipf-distributed traffic over a working set
 4x the device-hot capacity, so every burst promotes from the host warm pool
@@ -32,6 +44,8 @@ column stay O(#bursts), never O(users)).
 """
 from __future__ import annotations
 
+import json
+import os
 import shutil
 import tempfile
 import time
@@ -47,6 +61,11 @@ from repro.serve.ctr_server import CTRServer
 
 
 def run(quick: bool = True):
+    bench = {"schema": 1, "quick": bool(quick),
+             "generated_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ",
+                                            time.gmtime()),
+             "backends": {}, "quantization": {}, "roofline": {},
+             "hit_rate": {}}
     T = 2000
     B = 256 if quick else 1024
     n_req = 5 if quick else 20
@@ -95,8 +114,11 @@ def run(quick: bool = True):
                  "derived": f"{servers['decoupled[xla]'].bse.table_bytes()}"
                             "B_fixed_(L-free,bf16_wire)"})
     rows.extend(throughput_rows(quick))
+    rows.extend(fused_rows(quick, bench))
+    rows.extend(auc_parity_rows(quick, bench))
     rows.extend(sharded_rows(quick))
-    rows.extend(pressure_rows(quick))
+    rows.extend(pressure_rows(quick, bench))
+    _write_bench_json(bench)
     return rows
 
 
@@ -189,6 +211,254 @@ def throughput_rows(quick: bool = True, n_users: int = 1024,
     return rows
 
 
+def fused_rows(quick: bool = True, bench: dict = None) -> list[dict]:
+    """Fused serve megakernel vs the two-dispatch path, fp32 and int8
+    stores: users/sec + per-burst latency percentiles per backend, the
+    stored-bytes ratio, and compiled bytes-accessed (roofline) for the
+    three graphs. The int8 server runs the SAME ``serve_candidates`` call —
+    dequantization happens inside the gather+query dispatch."""
+    from repro.core.engine import EngineConfig, SDIMEngine
+    from repro.distributed import roofline
+    from repro.kernels.sdim_fused_serve.ref import sdim_fused_serve_ref
+    from repro.serve.bse_server import BSEServer
+
+    d, C, L = 32, 8, 64
+    reps = 3 if quick else 10
+    emb_i = jax.random.normal(jax.random.PRNGKey(11), (4000, d // 2))
+    emb_c = jax.random.normal(jax.random.PRNGKey(12), (50, d // 2))
+
+    def embed(params, items, cats):
+        return jnp.concatenate([emb_i[jnp.asarray(items) % 4000],
+                                emb_c[jnp.asarray(cats) % 50]], axis=-1)
+
+    rows = []
+    for backend in ("xla", "pallas"):
+        # interpret-mode Pallas on CPU is a python-loop simulator; the
+        # 1.5x acceptance claim is XLA@N=1024
+        N = 1024 if backend == "xla" else (128 if quick else 512)
+        bs = min(256, N)
+        eng = SDIMEngine(EngineConfig(
+            m=24, tau=3, d=d, backend=backend,
+            interpret=None if backend == "xla"
+            else jax.default_backend() != "tpu"))
+        rng = np.random.default_rng(0)
+        hist_i = rng.integers(0, 4000, (N, L))
+        hist_c = rng.integers(0, 50, (N, L))
+        servers = {}
+        for dt in ("fp32", "int8"):
+            # fp32 wire so the two paths differ ONLY in fused-vs-two
+            # dispatch (and the bytes row compares stored fp32 vs int8,
+            # not the bf16 wire default)
+            srv = BSEServer(embed, None, eng, capacity=N,
+                            wire_dtype=jnp.float32, table_dtype=dt)
+            for lo in range(0, N, bs):
+                us = list(range(lo, lo + bs))
+                srv.ingest_histories(us, hist_i[lo:lo + bs],
+                                     hist_c[lo:lo + bs])
+            servers[dt] = srv
+        q = embed(None, rng.integers(0, 4000, (N, C)),
+                  rng.integers(0, 50, (N, C)))
+        users = list(range(N))
+
+        def two_dispatch(lo):
+            tables = servers["fp32"].fetch_many(users[lo:lo + bs])
+            return eng.query(q[lo:lo + bs], jnp.asarray(tables, jnp.float32))
+
+        def fused(lo):
+            return servers["fp32"].serve_candidates(users[lo:lo + bs],
+                                                    q[lo:lo + bs])
+
+        def fused_int8(lo):
+            return servers["int8"].serve_candidates(users[lo:lo + bs],
+                                                    q[lo:lo + bs])
+
+        variants = {"two_dispatch": two_dispatch, "fused": fused,
+                    "fused_int8": fused_int8}
+        stats, outs = {}, {}
+        for name, fn in variants.items():
+            outs[name] = np.asarray(jax.block_until_ready(fn(0)))  # warm
+            lat = []
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                for lo in range(0, N, bs):
+                    tb = time.perf_counter()
+                    jax.block_until_ready(fn(lo))
+                    lat.append(time.perf_counter() - tb)
+            ups = reps * N / (time.perf_counter() - t0)
+            stats[name] = {
+                "users_per_sec": round(ups, 1),
+                "p50_ms": round(1e3 * float(np.percentile(lat, 50)), 3),
+                "p95_ms": round(1e3 * float(np.percentile(lat, 95)), 3),
+                "p99_ms": round(1e3 * float(np.percentile(lat, 99)), 3),
+            }
+        speedup = (stats["fused"]["users_per_sec"]
+                   / stats["two_dispatch"]["users_per_sec"])
+        err_fused = float(np.abs(outs["fused"] - outs["two_dispatch"]).max())
+        err_int8 = float(np.abs(outs["fused_int8"] - outs["two_dispatch"]).max())
+        tag = f"fused[{backend}]"
+        rows.append({"name": f"table5/{tag}/users_per_sec",
+                     "us_per_call": 1e6 / stats["fused"]["users_per_sec"],
+                     "shards": 1,
+                     "derived": f"fused={stats['fused']['users_per_sec']:.0f}/s"
+                                f"_two_dispatch="
+                                f"{stats['two_dispatch']['users_per_sec']:.0f}/s"
+                                f"_speedup={speedup:.2f}x_N={N}_burst={bs}"})
+        rows.append({"name": f"table5/{tag}/latency",
+                     "us_per_call": 1e3 * stats["fused"]["p50_ms"],
+                     "shards": 1,
+                     "derived": f"p50={stats['fused']['p50_ms']}ms"
+                                f"_p95={stats['fused']['p95_ms']}ms"
+                                f"_p99={stats['fused']['p99_ms']}ms"
+                                f"_int8_p50={stats['fused_int8']['p50_ms']}ms"})
+        rows.append({"name": f"table5/{tag}/parity",
+                     "us_per_call": 0.0, "shards": 1,
+                     "derived": f"max|fused-two_dispatch|={err_fused:.1e}"
+                                f"_max|int8-fp32|={err_int8:.1e}"})
+        if bench is not None:
+            bench["backends"][backend] = {
+                "n_users": N, "burst": bs, **stats,
+                "speedup_fused_vs_two_dispatch": round(speedup, 3),
+                "max_abs_err_fused_vs_two_dispatch": err_fused,
+                "max_abs_err_int8_vs_fp32": err_int8,
+            }
+
+        if backend == "xla":
+            b_fp32 = servers["fp32"].table_bytes()
+            b_int8 = servers["int8"].table_bytes()
+            ratio = b_fp32 / b_int8
+            rows.append({"name": "table5/quantized/table_bytes",
+                         "us_per_call": 0.0, "shards": 1,
+                         "derived": f"fp32={b_fp32}B_int8={b_int8}B"
+                                    f"_ratio={ratio:.2f}x_(payload+scales)"})
+            if bench is not None:
+                bench["quantization"].update({
+                    "table_bytes_fp32": int(b_fp32),
+                    "table_bytes_int8": int(b_int8),
+                    "bytes_ratio": round(ratio, 3),
+                })
+            # roofline: compiled bytes-accessed per graph — int8 shrinks
+            # the store operand ~4x. The fused-vs-two-dispatch win is
+            # dispatch count + host round-trip, which the cost model does
+            # not price; that shows up in the wall-clock rows above.
+            st32 = servers["fp32"].store
+            st8 = servers["int8"].store
+            slots = jnp.arange(bs, dtype=jnp.int32)
+            qb = q[:bs]
+            gather = jax.jit(lambda dat, sl: dat[sl].astype(jnp.float32))
+            query = jax.jit(lambda tb, qq: eng.query(qq, tb))
+            fused_j = jax.jit(lambda dat, sl, qq: sdim_fused_serve_ref(
+                dat, sl, qq, eng.R, eng.cfg.tau))
+            fused8_j = jax.jit(lambda dat, sc, sl, qq: sdim_fused_serve_ref(
+                dat, sl, qq, eng.R, eng.cfg.tau, scales=sc))
+            tables = gather(st32.data, slots)
+            recs = {
+                "two_dispatch": roofline.analyze(
+                    "gather", gather.lower(st32.data, slots).compile(),
+                    1).hbm_bytes_per_chip + roofline.analyze(
+                    "query", query.lower(tables, qb).compile(),
+                    1).hbm_bytes_per_chip,
+                "fused": roofline.analyze(
+                    "fused", fused_j.lower(st32.data, slots, qb).compile(),
+                    1).hbm_bytes_per_chip,
+                "fused_int8": roofline.analyze(
+                    "fused_int8", fused8_j.lower(
+                        st8.data, st8.scales, slots, qb).compile(),
+                    1).hbm_bytes_per_chip,
+            }
+            rows.append({"name": "table5/fused/roofline_bytes",
+                         "us_per_call": 0.0, "shards": 1,
+                         "derived": "_".join(f"{k}={v:.0f}B"
+                                             for k, v in recs.items())})
+            if bench is not None:
+                bench["roofline"] = {k: float(v) for k, v in recs.items()}
+    return rows
+
+
+def auc_parity_rows(quick: bool = True, bench: dict = None) -> list[dict]:
+    """AUC parity gate for int8 storage: train one SDIM CTR model on the
+    graded synthetic data (table 2/3 smoke depth), then serve the SAME
+    held-out examples through (a) the fp32 unfused oracle path and (b) the
+    int8 fused megakernel path, and compare serving-path AUCs. Per-row
+    scales cancel under Eq. 12's ℓ2-normalize, so the gap should sit well
+    inside the 1e-3 acceptance bound."""
+    from benchmarks.common import auc, paper_data_config, paper_model_config
+    from repro.data.pipeline import DeterministicStream
+    from repro.data.synthetic import generate_batch_graded
+    from repro.train.loop import make_train_step
+    from repro.train.optimizer import OptimizerConfig
+
+    steps = 200 if quick else 400
+    n_eval = 512 if quick else 2048
+    batch, burst, long_len = 128, 128, 64
+    dcfg = paper_data_config(long_len)
+    mcfg = paper_model_config("sdim", long_len, m=24)
+    model = CTRModel(mcfg)
+    params = model.init(jax.random.PRNGKey(0))
+    loss_fn = lambda p, b: model.loss(p, b)[0]
+    init_state, step_fn = make_train_step(
+        loss_fn, OptimizerConfig(kind="adamw", lr=2e-3), donate=False)
+    state = init_state(params)
+    stream = DeterministicStream(lambda s: generate_batch_graded(dcfg, batch, s),
+                                 base_seed=0)
+    for _ in range(steps):
+        b = {k: jnp.asarray(v) for k, v in next(stream).items()}
+        state, _ = step_fn(state, b)
+    params = state["params"]
+
+    servers = {
+        "fp32_unfused": CTRServer.build(
+            model, params, "decoupled", capacity=n_eval,
+            wire_dtype=jnp.float32, table_dtype="fp32"),
+        "int8_fused": CTRServer.build(
+            model, params, "decoupled", capacity=n_eval,
+            wire_dtype=jnp.float32, table_dtype="int8", fused=True),
+    }
+    scores = {k: [] for k in servers}
+    labels = []
+    for lo in range(0, n_eval, burst):
+        eb = generate_batch_graded(dcfg, burst, 10_000_000 + lo)
+        labels.append(eb["label"])
+        reqs = [(lo + i,
+                 {k: eb[k][i][None] for k in ("hist_items", "hist_cats",
+                                              "hist_mask")},
+                 eb["cand_item"][i:i + 1], eb["cand_cat"][i:i + 1],
+                 eb["ctx"][i][None])
+                for i in range(burst)]
+        for name, srv in servers.items():
+            scores[name].extend(float(s[0]) for s in srv.handle_requests(reqs))
+    labels = np.concatenate(labels)
+    auc_fp32 = auc(labels, np.asarray(scores["fp32_unfused"]))
+    auc_int8 = auc(labels, np.asarray(scores["int8_fused"]))
+    gap = abs(auc_fp32 - auc_int8)
+    if bench is not None:
+        bench["quantization"].update({
+            "auc_fp32_unfused": round(auc_fp32, 5),
+            "auc_int8_fused": round(auc_int8, 5),
+            "auc_gap": round(gap, 6),
+            "train_steps": steps, "eval_examples": n_eval,
+        })
+    return [{"name": "table5/quantized/auc_parity", "us_per_call": 0.0,
+             "shards": 1,
+             "derived": f"fp32_unfused={auc_fp32:.4f}"
+                        f"_int8_fused={auc_int8:.4f}_gap={gap:.1e}"
+                        f"_(bound_1e-3)_steps={steps}_eval={n_eval}"}]
+
+
+def _write_bench_json(bench: dict) -> str:
+    """Atomically write ``BENCH_serving.json`` at the repo root (schema
+    validated by ``tools/bench_check.py``)."""
+    path = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                        "BENCH_serving.json"))
+    tmp = f"{path}.tmp-{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump(bench, f, indent=2, sort_keys=True)
+        f.write("\n")
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    return path
+
+
 def sharded_rows(quick: bool = True, n_users: int = 512,
                  chunk: int = 128) -> list[dict]:
     """ShardedTableStore over every visible device (the ``shards`` column):
@@ -269,7 +539,7 @@ def sharded_rows(quick: bool = True, n_users: int = 512,
     return rows
 
 
-def pressure_rows(quick: bool = True) -> list[dict]:
+def pressure_rows(quick: bool = True, bench: dict = None) -> list[dict]:
     """Capacity-pressure: the tiered store under Zipf traffic whose working
     set is 4x the hot capacity (the acceptance bound), vs the unbounded
     single-tier store. The serving path is ``fetch_many`` — the op the CTR
@@ -336,6 +606,8 @@ def pressure_rows(quick: bool = True) -> list[dict]:
             tiers = tiered.store.tier_sizes()
         finally:
             shutil.rmtree(tmp, ignore_errors=True)
+        if bench is not None:
+            bench["hit_rate"][backend] = round(float(ts.hit_rate), 4)
         tag = f"pressure[{backend}]"
         rows.append({
             "name": f"table5/{tag}/users_per_sec",

@@ -30,6 +30,16 @@ operation         what it computes (paper §3.3 / §4)
                   ``pallas``: the fused ``sdim_serve`` kernel, where the
                   bucket table lives only in VMEM scratch (never
                   materialized in HBM).
+``serve_fused``   §4.4 decoupled serving at multi-user scale: gather a
+                  batch of precomputed rows out of the (N, G, U, d) table
+                  store by slot, dequantize (per-row scales for int8/fp8
+                  stores) and score candidates — one dispatch, no
+                  materialized intermediate rows. ``xla``: gather +
+                  ``sdim.fused_query`` (``kernels/sdim_fused_serve/ref``).
+                  ``pallas``: the ``sdim_fused_serve`` megakernel — the
+                  slot gather is the scalar-prefetch block index map, the
+                  dequant happens in VMEM, and the store blocks stream
+                  double-buffered across the user grid.
 ``update``        §4.4 real-time ingest at multi-user scale: scatter-add a
                   batch of event-behavior deltas into selected rows of a
                   contiguous (N, G, U, d) table store. ``xla``: bucket the
@@ -214,6 +224,73 @@ def _sharded_serve_fn(mesh, axis, tau, backend, block_l, interpret):
     return jax.jit(fn)
 
 
+def _serve_fused_impl(store, slots, present, q, scales, R, *, tau, backend,
+                      block_c, interpret):
+    if backend == "xla":
+        from repro.kernels.sdim_fused_serve.ref import sdim_fused_serve_ref
+
+        return sdim_fused_serve_ref(store, slots, q, R, tau,
+                                    scales=scales, present=present)
+    from repro.kernels.sdim_fused_serve.sdim_fused_serve import \
+        sdim_fused_serve
+
+    return sdim_fused_serve(store, slots, q, R, tau, scales=scales,
+                            present=present, block_c=block_c,
+                            interpret=interpret)
+
+
+_serve_fused = jax.jit(_serve_fused_impl, static_argnames=(
+    "tau", "backend", "block_c", "interpret"))
+
+
+@lru_cache(maxsize=None)
+def _sharded_fused_serve_fn(mesh, axis, tau, backend, block_c, interpret,
+                            quantized):
+    """One dispatch serving a replicated candidate batch off a row-sharded
+    (S, C, G, U, d) store: every shard runs the fused megakernel over the
+    whole batch but owns only its rows — foreign users get their slot
+    clamped to 0 and ``present`` zeroed (the kernel's output mask), so the
+    psum reassembles exactly one real interest vector per user."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    rep3 = P(None, None, None)
+
+    def run_shard(block, sc, sh, lo, pr, q, r):
+        mine = sh == jax.lax.axis_index(axis)
+        out = _serve_fused_impl(
+            block[0], jnp.where(mine, lo, 0), jnp.logical_and(pr, mine),
+            q, sc, r, tau=tau, backend=backend, block_c=block_c,
+            interpret=interpret)
+        return jax.lax.psum(out, axis)
+
+    if quantized:
+        def fn(store, scales, shard_ids, locals_, present, q, R):
+            def body(block, scb, sh, lo, pr, q, r):
+                return run_shard(block, scb[0], sh, lo, pr, q, r)
+
+            return shard_map(
+                body, mesh=mesh,
+                in_specs=(P(axis, None, None, None, None),
+                          P(axis, None, None, None),
+                          P(None), P(None), P(None), rep3, P(None, None)),
+                out_specs=rep3, check_rep=False)(
+                store, scales, shard_ids, locals_, present, q, R)
+    else:
+        def fn(store, shard_ids, locals_, present, q, R):
+            def body(block, sh, lo, pr, q, r):
+                return run_shard(block, None, sh, lo, pr, q, r)
+
+            return shard_map(
+                body, mesh=mesh,
+                in_specs=(P(axis, None, None, None, None),
+                          P(None), P(None), P(None), rep3, P(None, None)),
+                out_specs=rep3, check_rep=False)(
+                store, shard_ids, locals_, present, q, R)
+
+    return jax.jit(fn)
+
+
 @partial(jax.jit, static_argnames=("tau", "backend", "block_l", "interpret"))
 def _serve(q, seq, mask, R, *, tau, backend, block_l, interpret):
     if backend == "xla":
@@ -284,6 +361,44 @@ class SDIMEngine:
         return _serve(q, seq, mask, self._R(R), tau=self.cfg.tau,
                       backend=self.backend, block_l=self.cfg.block_l,
                       interpret=self.interpret).astype(seq.dtype)
+
+    def serve_fused(self, store: jax.Array, slots, q: jax.Array,
+                    present: Optional[jax.Array] = None,
+                    scales: Optional[jax.Array] = None,
+                    R: Optional[jax.Array] = None) -> jax.Array:
+        """§4.4 decoupled serving in ONE dispatch: gather rows ``slots``
+        (B,) out of the (N, G, U, d) table store, dequantize (``scales``
+        per-row for int8/fp8 stores), and score candidates (B, C, d) —
+        no materialized (B, G, U, d) intermediate. ``present`` (B,) zeroes
+        absent users' interest (the ``fetch_many`` miss contract). Returns
+        (B, C, d) fp32."""
+        return _serve_fused(
+            store, jnp.asarray(slots, jnp.int32),
+            None if present is None else jnp.asarray(present),
+            q, scales, self._R(R), tau=self.cfg.tau, backend=self.backend,
+            block_c=self.cfg.block_c, interpret=self.interpret)
+
+    def serve_fused_sharded(self, store: jax.Array, slots, q: jax.Array,
+                            present: Optional[jax.Array] = None,
+                            scales: Optional[jax.Array] = None,
+                            R: Optional[jax.Array] = None, *,
+                            mesh) -> jax.Array:
+        """``serve_fused`` against a row-sharded (S, C, G, U, d) store:
+        ``slots`` is the (B, 2) [shard, local] handle array a
+        ``ShardedTableStore`` hands out; each shard serves the rows it owns
+        and a psum reassembles the batch. Semantics match ``serve_fused``."""
+        from repro.distributed.mesh_ctx import MeshCtx
+
+        ctx = MeshCtx.wrap(mesh)
+        slots = jnp.asarray(slots, jnp.int32)
+        if present is None:
+            present = jnp.ones((q.shape[0],), bool)
+        present = jnp.asarray(present, bool)
+        fn = _sharded_fused_serve_fn(
+            ctx.mesh, ctx.model_axis, self.cfg.tau, self.backend,
+            self.cfg.block_c, self.interpret, scales is not None)
+        args = (store,) if scales is None else (store, scales)
+        return fn(*args, slots[:, 0], slots[:, 1], present, q, self._R(R))
 
     def update(self, store: jax.Array, slots, events: jax.Array,
                mask: Optional[jax.Array] = None,

@@ -1,0 +1,17 @@
+"""Jitted wrapper — the engine's ``serve_fused`` reaches the kernel here."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sdim_fused_serve.sdim_fused_serve import sdim_fused_serve
+
+
+@partial(jax.jit, static_argnames=("tau", "interpret"))
+def fused_serve(store, slots, q, R, tau: int, scales=None, present=None,
+                interpret: bool = False):
+    return sdim_fused_serve(store, jnp.asarray(slots, jnp.int32), q, R, tau,
+                            scales=scales, present=present,
+                            interpret=interpret)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the fused serve megakernel (also the XLA backend)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sdim, simhash
+
+
+def sdim_fused_serve_ref(
+    store: jax.Array,      # (N, G, U, d) table store, any storage dtype
+    slots: jax.Array,      # (B,) int32
+    q: jax.Array,          # (B, C, d) candidates
+    R: jax.Array,          # (m, d)
+    tau: int,
+    *,
+    scales: Optional[jax.Array] = None,   # (N, G, U)
+    present: Optional[jax.Array] = None,  # (B,)
+) -> jax.Array:
+    """Gather ``slots`` rows (dequantizing via ``scales``), hash candidates,
+    read interest (Eq. 12); absent users' output is zero-masked. This is the
+    two-dispatch path the megakernel fuses — the (B, G, U, d) gather IS
+    materialized here."""
+    rows = store[slots].astype(jnp.float32)                  # (B, G, U, d)
+    if scales is not None:
+        rows = rows * scales[slots].astype(jnp.float32)[..., None]
+    sig_q = simhash.signatures(q, R, tau)
+    out = sdim.fused_query(rows, sig_q)                      # (B, C, d)
+    if present is not None:
+        out = out * present.astype(jnp.float32)[:, None, None]
+    return out

@@ -96,12 +96,28 @@ def main():
     p.add_argument("--warm-capacity", type=int, default=None,
                    help="bound the host warm pool; overflow spills to "
                         "--store-dir")
+    p.add_argument("--table-dtype", default="fp32",
+                   help="BSE table STORAGE dtype: fp32 | bf16 | int8 | fp8 "
+                        "(int8/fp8 quantize on write with per-row scales; "
+                        "fp8 only where jax exposes float8_e4m3fn)")
+    p.add_argument("--fused-serve", action="store_true",
+                   help="serve micro-batches through the fused megakernel "
+                        "(one gather+dequant+query dispatch instead of "
+                        "fetch_many + model-side query)")
     p.add_argument("--tokens", type=int, default=32, help="LM decode steps")
     p.add_argument("--sdim-kv", action="store_true",
                    help="LM: SDIM bucket-compressed KV decode")
     args = p.parse_args()
 
+    from repro.serve.quant import TABLE_DTYPES, resolve_table_dtype
     from repro.serve.tiered_store import DEFAULT_HOT_CAPACITY, is_tiered
+
+    if args.table_dtype not in TABLE_DTYPES:
+        p.error(f"--table-dtype {args.table_dtype!r} not available; have "
+                f"{sorted(TABLE_DTYPES)}"
+                + ("" if "fp8" in TABLE_DTYPES or args.table_dtype != "fp8"
+                   else " (this jax has no float8_e4m3fn)"))
+    table_dtype = resolve_table_dtype(args.table_dtype)
 
     mod = registry.get(args.arch)
     cfg = mod.SMOKE
@@ -114,6 +130,14 @@ def main():
         p.error(f"--hot-capacity/--store-dir/--policy tier the BSE table "
                 f"store (recsys serving only); arch {args.arch!r} is family "
                 f"{mod.FAMILY!r}")
+    if mod.FAMILY != "recsys" and (args.table_dtype != "fp32"
+                                   or args.fused_serve):
+        p.error(f"--table-dtype/--fused-serve configure the BSE table store "
+                f"(recsys serving only); arch {args.arch!r} is family "
+                f"{mod.FAMILY!r}")
+    if args.fused_serve and args.micro_batch < 2:
+        p.error("--fused-serve rides the micro-batched path; give "
+                "--micro-batch >= 2")
     if tiered:
         # the implicit bound when --store-dir/--policy tier the store
         # without an explicit --hot-capacity
@@ -143,12 +167,19 @@ def main():
             p.error(f"--hot-capacity/--store-dir/--policy tier the BSE table "
                     f"store, which only the decoupled (sdim) deployment has; "
                     f"arch {args.arch!r} serves {mode!r}")
+        if mode != "decoupled" and (args.table_dtype != "fp32"
+                                    or args.fused_serve):
+            p.error(f"--table-dtype/--fused-serve configure the BSE table "
+                    f"store, which only the decoupled (sdim) deployment has; "
+                    f"arch {args.arch!r} serves {mode!r}")
         mesh_ctx = (build_mesh(args.shards, args.mesh, err=p.error)
                     if mode == "decoupled" else None)
         server = CTRServer.build(model, params, mode, mesh=mesh_ctx,
                                  hot_capacity=args.hot_capacity,
                                  store_dir=args.store_dir, policy=args.policy,
-                                 warm_capacity=args.warm_capacity)
+                                 warm_capacity=args.warm_capacity,
+                                 table_dtype=table_dtype,
+                                 fused=args.fused_serve)
         bse = server.bse
         if cfg.interest.kind == "sdim":
             print(f"SDIM engine backend: {model.engine.backend}"
@@ -198,8 +229,10 @@ def main():
         if pending:
             flush()
         if bse:
-            print(f"{server.stats.ms_per_request:.1f} ms/request; "
-                  f"table {bse.table_bytes()} B")
+            print(f"{server.stats.ms_per_request:.1f} ms/request"
+                  f"{' (fused serve)' if args.fused_serve else ''}; "
+                  f"table {bse.table_bytes()} B "
+                  f"({args.table_dtype} storage)")
             if tiered:
                 ts = bse.store.stats
                 print(f"tiered store {bse.store.tier_sizes()} "

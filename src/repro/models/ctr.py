@@ -304,7 +304,8 @@ class CTRModel:
         )[0]
 
     def score_candidates_many(self, params, user_batch, cand_items, cand_cats,
-                              ctx, sparse_ids=None, bucket_tables=None):
+                              ctx, sparse_ids=None, bucket_tables=None,
+                              interest=None):
         """A micro-batch of B requests in ONE dispatch — row i of the output
         is ``score_candidates`` of request i.
 
@@ -312,8 +313,13 @@ class CTRModel:
         (B, C, ctx_dim). ``bucket_tables`` (B, G, U, e) is the decoupled-BSE
         deployment (one ``TableStore`` gather feeds all B long branches);
         without it the sdim path runs ONE batched ``engine.serve`` over the
-        padded (B, C, d) candidate block. ``sparse_ids`` (B, C, n_sparse)
-        supplies wide_deep's fields. Returns (B, C) logits."""
+        padded (B, C, d) candidate block. ``interest`` (B, C, e) injects
+        PRECOMPUTED long-term interest vectors — the fused-serve deployment,
+        where ``BSEServer.serve_candidates`` already ran the query inside
+        the megakernel and only the C·e interest crossed the wire; the long
+        branch then does no SDIM compute at all. ``sparse_ids``
+        (B, C, n_sparse) supplies wide_deep's fields. Returns (B, C)
+        logits."""
         cfg = self.cfg
         B, C = cand_items.shape
         e = cfg.behavior_dim
@@ -340,7 +346,10 @@ class CTRModel:
         feats = [tflat, self._short_rep(params, pair, tflat)]
 
         if cfg.interest.kind != "none":
-            if bucket_tables is not None:
+            if interest is not None:
+                assert cfg.interest.kind == "sdim"
+                long_out = interest
+            elif bucket_tables is not None:
                 assert cfg.interest.kind == "sdim"
                 R = params["interest"]["buffers"]["R"]
                 long_out = self.engine.query(target_e, bucket_tables, R=R)

@@ -112,6 +112,7 @@ class BSEServer:
         policy: Optional[str] = None,
         warm_capacity: Optional[int] = None,
         store: Any = None,
+        table_dtype: Any = jnp.float32,
     ):
         """``mesh`` (a Mesh or MeshCtx) shards the table store over the
         mesh's model axis (``ShardedTableStore``): capacity scales with the
@@ -124,7 +125,13 @@ class BSEServer:
         or ``warm_capacity`` selects the ``TieredTableStore`` instead —
         bounded HBM, host/disk overflow, snapshot-restore — wrapping the
         sharded hot tier when ``mesh`` is also given. An explicit ``store``
-        (e.g. from ``TieredTableStore.restore``) overrides all of these."""
+        (e.g. from ``TieredTableStore.restore``) overrides all of these.
+
+        ``table_dtype`` is the STORAGE dtype of the bucket tables
+        (``serve/quant.py``: fp32 | bf16 | int8 | fp8). Quantized stores
+        keep per-row scales, quantize on write, and serve through either
+        ``fetch_many`` (dequantized gather) or ``serve_candidates`` (the
+        fused megakernel dequantizes in VMEM)."""
         self.embed_fn = embed_fn
         self.params = params
         self.engine = engine
@@ -142,13 +149,14 @@ class BSEServer:
                 cfg.n_groups, cfg.n_buckets, cfg.d,
                 hot_capacity=capacity if hot_capacity is None else hot_capacity,
                 mesh=mesh, policy=policy or "clock", store_dir=store_dir,
-                warm_capacity=warm_capacity)
+                warm_capacity=warm_capacity, dtype=table_dtype)
         elif mesh is None:
             self.store = TableStore(cfg.n_groups, cfg.n_buckets, cfg.d,
-                                    capacity=capacity)
+                                    capacity=capacity, dtype=table_dtype)
         else:
             self.store = ShardedTableStore(cfg.n_groups, cfg.n_buckets,
-                                           cfg.d, mesh, capacity=capacity)
+                                           cfg.d, mesh, capacity=capacity,
+                                           dtype=table_dtype)
         self.tables = _TablesView(self.store)
         self.stats = BSEStats()
 
@@ -208,7 +216,18 @@ class BSEServer:
         ev_e = self.embed_fn(self.params, items, cats)        # (B, E, d)
         m = None if mask is None else jnp.asarray(mask)
         slots = self.store.assign(users)
-        if self.store.sharded:
+        if self.store.quantized:
+            # int8/fp8 payloads can't take an in-place scatter-add (the raw
+            # bytes are meaningless without their scales): encode the event
+            # deltas, fold duplicates, then read-modify-write the touched
+            # rows — one dequantizing gather + one requantizing scatter
+            deltas = self.engine.encode(ev_e, m, R=self.R)    # (B, G, U, d)
+            uniq, inv = np.unique(np.asarray(slots), axis=0,
+                                  return_inverse=True)
+            deltas = jax.ops.segment_sum(deltas, jnp.asarray(inv.ravel()),
+                                         num_segments=len(uniq))
+            self.store.write(uniq, self.store.rows(uniq) + deltas)
+        elif self.store.sharded:
             self.store.data = self.engine.update_sharded(
                 self.store.data, slots, ev_e, m, R=self.R,
                 mesh=self.store.mesh_ctx, donate=True)
@@ -259,9 +278,41 @@ class BSEServer:
         self.stats.bytes_transmitted += wire.size * self.wire_dtype.itemsize
         return wire
 
+    def serve_candidates(self, users: Sequence[Any], q: jax.Array,
+                         R: Optional[jax.Array] = None) -> jax.Array:
+        """Fused serving: score candidates ``q`` (B, C, d) for ``users`` in
+        ONE dispatch — the megakernel gathers each user's row straight out
+        of the table store (dequantizing in VMEM for int8/fp8 stores) and
+        returns interest vectors (B, C, d); the (B, G, U, d) table batch
+        that ``fetch_many`` materializes never exists. Unknown users get
+        zero interest (same miss contract as ``fetch_many``). What crosses
+        to the CTR server is the (B, C, d) interest array in the wire dtype
+        — C·d floats per user instead of G·U·d."""
+        slots, present = self.store.lookup(users)
+        scales = self.store.scales
+        if self.store.sharded:
+            out = self.engine.serve_fused_sharded(
+                self.store.data, slots, q, present=present, scales=scales,
+                R=self.R if R is None else R, mesh=self.store.mesh_ctx)
+        else:
+            out = self.engine.serve_fused(
+                self.store.data, slots, q, present=present, scales=scales,
+                R=self.R if R is None else R)
+        wire = out.astype(self.wire_dtype)
+        self.stats.n_fetches += len(users)
+        self.stats.n_misses += len(users) - int(present.sum())
+        self.stats.bytes_transmitted += wire.size * self.wire_dtype.itemsize
+        return wire
+
     def table_bytes(self) -> int:
+        """Per-user serving-state bytes. Quantized stores report the STORED
+        bytes (payload + per-row scales — the fused path serves straight
+        from storage); float stores keep the historical wire-cast figure
+        (the paper's 8KB budget is about the fetched array)."""
         if len(self.store) == 0:
             return 0
+        if self.store.quantized:
+            return self.store.row_nbytes()
         return int(np.prod(self.store.row_shape)) * self.wire_dtype.itemsize
 
     # ------------------------------------------------------------------

@@ -58,7 +58,8 @@ class CTRServer:
               *, mesh: Any = None, capacity: int = 64,
               wire_dtype: Any = jnp.bfloat16, hot_capacity: int = None,
               store_dir: str = None, policy: str = None,
-              warm_capacity: int = None) -> "CTRServer":
+              warm_capacity: int = None, table_dtype: Any = jnp.float32,
+              fused: bool = False) -> "CTRServer":
         """Mesh-aware construction of the whole serving pair: wires the
         model's behavior-embedding fn and checkpointed hash family ``R``
         into a ``BSEServer`` (decoupled mode), sharding its table store over
@@ -68,7 +69,14 @@ class CTRServer:
         snapshot-restore; see serve/tiered_store.py) — the request path is
         unchanged, ``fetch_many`` just promotes through the tiers. Every
         launcher and benchmark builds through here so the embed/R plumbing
-        lives in one place."""
+        lives in one place.
+
+        ``table_dtype`` picks the BSE table STORAGE dtype (fp32 | bf16 |
+        int8 | fp8, see serve/quant.py). ``fused=True`` routes decoupled
+        micro-batches through ``BSEServer.serve_candidates`` — ONE fused
+        gather+dequant+query dispatch instead of ``fetch_many`` + the
+        model-side ``engine.query``; only the (B, C, e) interest crosses
+        between the servers."""
         from repro.serve.tiered_store import is_tiered
 
         bse = None
@@ -81,6 +89,10 @@ class CTRServer:
             raise ValueError(
                 f"hot_capacity/store_dir/policy tier the BSE table store, "
                 f"which only the decoupled deployment has (mode={mode!r})")
+        if mode != "decoupled" and fused:
+            raise ValueError(
+                f"fused serving reads the BSE table store, which only the "
+                f"decoupled deployment has (mode={mode!r})")
         if mode == "decoupled":
             embed = lambda p, i, c: model._embed_behaviors(
                 p, jnp.asarray(i), jnp.asarray(c))
@@ -89,11 +101,13 @@ class CTRServer:
                             wire_dtype=wire_dtype, capacity=capacity,
                             mesh=mesh, hot_capacity=hot_capacity,
                             store_dir=store_dir, policy=policy,
-                            warm_capacity=warm_capacity)
-        return cls(model, params, bse, mode=mode)
+                            warm_capacity=warm_capacity,
+                            table_dtype=table_dtype)
+        return cls(model, params, bse, mode=mode, fused=fused)
 
     def __init__(self, model: CTRModel, params: Any,
-                 bse_server: Optional[BSEServer] = None, mode: str = "decoupled"):
+                 bse_server: Optional[BSEServer] = None,
+                 mode: str = "decoupled", fused: bool = False):
         assert mode in ("decoupled", "inline", "target_attention")
         if mode == "decoupled":
             assert bse_server is not None
@@ -101,6 +115,7 @@ class CTRServer:
         self.params = params
         self.bse = bse_server
         self.mode = mode
+        self.fused = fused
         self.stats = ServeStats()
         self._score_table = jax.jit(
             lambda p, u, ci, cc, ctx, tb: model.score_candidates(
@@ -111,7 +126,13 @@ class CTRServer:
             lambda p, u, ci, cc, ctx, tb: model.score_candidates_many(
                 p, u, ci, cc, ctx, bucket_tables=tb)
         )
+        self._score_many_interest = jax.jit(
+            lambda p, u, ci, cc, ctx, it: model.score_candidates_many(
+                p, u, ci, cc, ctx, interest=it)
+        )
         self._score_many_raw = jax.jit(model.score_candidates_many)
+        self._embed_targets = jax.jit(
+            lambda p, ci, cc: model._embed_behaviors(p, ci, cc))
 
     def handle_request(self, user: Any, user_batch: dict,
                        cand_items, cand_cats, ctx) -> jax.Array:
@@ -186,10 +207,20 @@ class CTRServer:
                     np.concatenate([np.asarray(b["hist_mask"])
                                     for b in missing.values()]),
                 )
-            tables = self.bse.fetch_many(users)
-            self.stats.fetch_time_s += time.perf_counter() - tf0
-            scores = self._score_many_table(self.params, hist, ci, cc, ctx,
-                                            tables)
+            if self.fused:
+                # fused deployment: the megakernel gathers + dequantizes +
+                # queries in one dispatch on the BSE side; only (B, C, e)
+                # interest vectors reach the scoring graph
+                target_e = self._embed_targets(self.params, ci, cc)
+                interest = self.bse.serve_candidates(users, target_e)
+                self.stats.fetch_time_s += time.perf_counter() - tf0
+                scores = self._score_many_interest(self.params, hist, ci, cc,
+                                                   ctx, interest)
+            else:
+                tables = self.bse.fetch_many(users)
+                self.stats.fetch_time_s += time.perf_counter() - tf0
+                scores = self._score_many_table(self.params, hist, ci, cc,
+                                                ctx, tables)
         else:
             scores = self._score_many_raw(self.params, hist, ci, cc, ctx)
         scores.block_until_ready()

@@ -13,6 +13,19 @@ full dispatch for one user. The store instead keeps
     slots are zeroed and pushed to the free list; the next new user reuses
     them, keeping the array dense).
 
+Storage dtype (``table_dtype`` end to end): rows live in fp32 by default,
+but the store also speaks ``bf16`` and the *quantized* dtypes ``int8`` /
+``fp8`` (see ``serve/quant.py``). Quantized stores keep a parallel per-row
+``scales`` array — shape ``(N, G, U)``, one fp32 scale per bucket row —
+quantize on ``write`` and dequantize on ``rows``, so every consumer above
+this class still sees fp32 tables while HBM holds ~4x fewer bytes. The
+raw-byte seam ``rows_raw``/``write_raw`` moves (payload, scales) verbatim
+for tier demotion/promotion (``serve/tiered_store.py``), which must be
+bit-exact. Non-quantized narrow dtypes get a SATURATING cast on ``write``
+(clip to the representable range + ``n_saturated`` counter + one warning)
+instead of ``astype``'s silent wrap — an fp32 outlier can no longer clip
+unnoticed.
+
 ``ShardedTableStore`` is the same contract partitioned over a device mesh:
 the store becomes a ``(S, C, G, U, d)`` array row-sharded over the mesh's
 model axis (per the recsys layout in ``distributed/sharding.py`` — the user
@@ -31,6 +44,7 @@ index.
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Any, Iterator, Optional, Sequence
 
 import jax
@@ -41,6 +55,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.distributed.mesh_ctx import MeshCtx
 from repro.distributed.sharding import table_store_spec
+from repro.serve.quant import (dequantize_rows, is_quantized, quantize_rows,
+                               resolve_table_dtype, saturate_cast, _range)
 
 
 # the store drops its reference the moment the scatter returns, so the buffer
@@ -50,6 +66,17 @@ def _scatter_set(data, slots, rows):
     return data.at[slots].set(rows)
 
 
+# quantized stores scatter payload + scales in ONE dispatch, both donated
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def _scatter_set2(data, scales, slots, rows, row_scales):
+    return data.at[slots].set(rows), scales.at[slots].set(row_scales)
+
+
+@jax.jit
+def _gather_dequant(data, scales, slots):
+    return dequantize_rows(data[slots], scales[slots])
+
+
 class TableStore:
     sharded = False
 
@@ -57,13 +84,28 @@ class TableStore:
                  capacity: int = 64, dtype: Any = jnp.float32):
         assert capacity >= 1
         self.row_shape = (n_groups, n_buckets, d)
-        self.dtype = jnp.dtype(dtype)
+        self.dtype = jnp.dtype(resolve_table_dtype(dtype))
+        self.quantized = is_quantized(self.dtype)
+        self._check_range = (not self.quantized
+                             and _range(self.dtype) is not None)
         self.data = jnp.zeros((capacity, *self.row_shape), self.dtype)
+        # one fp32 scale per (G, U) bucket row (see serve/quant.py)
+        self.scales = (jnp.zeros((capacity, n_groups, n_buckets), jnp.float32)
+                       if self.quantized else None)
         self._slot_of: dict[Any, int] = {}
         self._user_of: dict[int, Any] = {}
         self._free = list(range(capacity - 1, -1, -1))
         self.n_grows = 0
         self.n_evictions = 0
+        self.n_saturated = 0
+
+    def _note_saturation(self, n: int) -> None:
+        if n and not self.n_saturated:
+            warnings.warn(
+                f"TableStore({self.dtype}): {n} value(s) outside the "
+                f"storage dtype's range were saturated (see n_saturated)",
+                stacklevel=3)
+        self.n_saturated += n
 
     # ------------------------------------------------------------------
     # index
@@ -125,6 +167,9 @@ class TableStore:
     def _grow(self) -> None:
         cap = self.capacity
         self.data = jnp.concatenate([self.data, jnp.zeros_like(self.data)])
+        if self.quantized:
+            self.scales = jnp.concatenate(
+                [self.scales, jnp.zeros_like(self.scales)])
         self._free[:0] = range(2 * cap - 1, cap - 1, -1)
         self.n_grows += 1
 
@@ -157,6 +202,8 @@ class TableStore:
         self._user_of.clear()
         self._free = list(range(self.capacity - 1, -1, -1))
         self.data = jnp.zeros_like(self.data)
+        if self.quantized:
+            self.scales = jnp.zeros_like(self.scales)
         self.n_grows = 0
         self.n_evictions = 0
 
@@ -164,26 +211,83 @@ class TableStore:
     # rows
     # ------------------------------------------------------------------
     def rows(self, slots: Sequence[int]) -> jax.Array:
-        """One gather: (B,) slots -> (B, G, U, d)."""
-        return self.data[jnp.asarray(slots, jnp.int32)]
+        """One gather: (B,) slots -> (B, G, U, d). Quantized stores
+        dequantize in the same dispatch — callers always see fp32 rows."""
+        slots = jnp.asarray(slots, jnp.int32)
+        if self.quantized:
+            return _gather_dequant(self.data, self.scales, slots)
+        return self.data[slots]
 
     def row(self, user: Any) -> Optional[jax.Array]:
         s = self._slot_of.get(user)
-        return None if s is None else self.data[s]
+        if s is None:
+            return None
+        if self.quantized:
+            return dequantize_rows(self.data[s], self.scales[s])
+        return self.data[s]
 
     def write(self, slots: Sequence[int], rows: jax.Array) -> None:
-        """One scatter: overwrite (B,) slots with rows (B, G, U, d)."""
-        self.data = _scatter_set(self.data, jnp.asarray(slots, jnp.int32),
-                                 rows.astype(self.dtype))
+        """One scatter: overwrite (B,) slots with rows (B, G, U, d).
+        Quantized stores quantize-on-write (payload + per-row scales, still
+        one dispatch); narrow float targets take a saturating cast instead
+        of a silent ``astype`` wrap (counted in ``n_saturated``)."""
+        slots = jnp.asarray(slots, jnp.int32)
+        if self.quantized:
+            payload, row_scales = quantize_rows(rows, dtype=self.dtype)
+            self.data, self.scales = _scatter_set2(
+                self.data, self.scales, slots, payload, row_scales)
+            return
+        if self._check_range:
+            rows, n = saturate_cast(rows, dtype=self.dtype)
+            self._note_saturation(int(n))
+        else:
+            rows = rows.astype(self.dtype)
+        self.data = _scatter_set(self.data, slots, rows)
+
+    # ------------------------------------------------------------------
+    # raw-byte seam (tier demotion/promotion must be bit-exact)
+    # ------------------------------------------------------------------
+    def rows_raw(self, slots) -> tuple[jax.Array, Optional[jax.Array]]:
+        """(B,) slots -> (stored payload (B, G, U, d) in the STORAGE dtype,
+        per-row scales (B, G, U) or None) — no dequantize, no cast."""
+        slots = jnp.asarray(slots, jnp.int32)
+        payload = self.data[slots]
+        return payload, (self.scales[slots] if self.quantized else None)
+
+    def write_raw(self, slots, payload: jax.Array,
+                  scales: Optional[jax.Array] = None) -> None:
+        """Inverse of ``rows_raw``: scatter already-quantized bytes back
+        verbatim (promotion path) — bit-exact, never re-quantized."""
+        slots = jnp.asarray(slots, jnp.int32)
+        assert payload.dtype == self.dtype, (payload.dtype, self.dtype)
+        if self.quantized:
+            assert scales is not None
+            self.data, self.scales = _scatter_set2(
+                self.data, self.scales, slots, payload,
+                jnp.asarray(scales, jnp.float32))
+        else:
+            assert scales is None
+            self.data = _scatter_set(self.data, slots, payload)
+
+    def row_nbytes(self) -> int:
+        """Stored bytes per user row: payload + (quantized) its scales."""
+        n = int(np.prod(self.row_shape)) * self.dtype.itemsize
+        if self.quantized:
+            n += int(np.prod(self.row_shape[:-1])) * 4
+        return n
 
     # ------------------------------------------------------------------
     # serialization seam (tiered snapshot/restore)
     # ------------------------------------------------------------------
     def host_state(self) -> dict:
         """Full store state as host objects: the device array (one D2H copy)
-        plus the user→slot index as a json-able list of pairs."""
-        return {"data": np.asarray(self.data),
-                "index": [[u, int(s)] for u, s in self._slot_of.items()]}
+        plus the user→slot index as a json-able list of pairs (quantized
+        stores add the scales array)."""
+        state = {"data": np.asarray(self.data),
+                 "index": [[u, int(s)] for u, s in self._slot_of.items()]}
+        if self.quantized:
+            state["scales"] = np.asarray(self.scales)
+        return state
 
     def load_host_state(self, state: dict) -> None:
         """Inverse of ``host_state``: replaces array + index wholesale. The
@@ -192,6 +296,9 @@ class TableStore:
         data = np.asarray(state["data"])
         assert data.shape[1:] == self.row_shape, (data.shape, self.row_shape)
         self.data = jnp.asarray(data, self.dtype)
+        if self.quantized:
+            self.scales = jnp.asarray(np.asarray(state["scales"]),
+                                      jnp.float32)
         self._slot_of = {u: int(s) for u, s in state["index"]}
         self._user_of = {s: u for u, s in self._slot_of.items()}
         self._free = [s for s in range(self.capacity - 1, -1, -1)
@@ -202,31 +309,39 @@ class TableStore:
 # sharded store: (S, C, G, U, d) row-sharded over the mesh's model axis
 # ---------------------------------------------------------------------------
 @functools.lru_cache(maxsize=None)
-def _sharded_ops(mesh, axis: str):
-    """jitted shard_map bodies for one (mesh, axis); cached so every store on
-    the same mesh shares compilations. All three are ONE dispatch each:
+def _sharded_ops(mesh, axis: str, rank: int = 3):
+    """jitted shard_map bodies for one (mesh, axis, per-row rank); cached so
+    every store on the same mesh shares compilations. ``rank`` is the ndim
+    of one stored row — 3 for the (G, U, d) table payload, 2 for the (G, U)
+    per-row scales of a quantized store — so the same bodies serve both
+    arrays. All three are ONE dispatch each:
 
       * gather  — every shard reads ``locals`` from its own block, masks the
         rows it doesn't own to zero, and a psum over ``axis`` assembles the
-        replicated (B, G, U, d) result (exactly one shard contributes each
-        row);
+        replicated (B, …) result (exactly one shard contributes each row;
+        integer payloads are summed in int32 and cast back, exact);
       * scatter — foreign rows are routed to the out-of-range index C and
         dropped (``mode="drop"``), so each shard writes only its own rows;
       * grow    — per-shard doubling: each shard concatenates a zero block of
         its own size, (S, C, …) -> (S, 2C, …) with no cross-shard traffic.
     """
-    row5 = table_store_spec(axis)
-    rep1, rep4 = P(None), P(None, None, None, None)
+    rowspec = P(axis, *([None] * (rank + 1)))
+    rep1 = P(None)
+    repn = P(*([None] * (rank + 1)))
 
     def gather(data, shard_ids, locals_):
         def body(block, sh, lo):
             mine = sh == jax.lax.axis_index(axis)
-            rows = block[0][lo]                              # (B, G, U, d)
-            rows = jnp.where(mine[:, None, None, None], rows, 0)
-            return jax.lax.psum(rows, axis)
+            rows = block[0][lo]                              # (B, …)
+            integer = jnp.issubdtype(rows.dtype, jnp.integer)
+            if integer:                  # int8 would overflow/reject psum
+                rows = rows.astype(jnp.int32)
+            rows = jnp.where(mine.reshape((-1,) + (1,) * rank), rows, 0)
+            out = jax.lax.psum(rows, axis)
+            return out.astype(block.dtype) if integer else out
 
-        return shard_map(body, mesh=mesh, in_specs=(row5, rep1, rep1),
-                         out_specs=rep4, check_rep=False)(
+        return shard_map(body, mesh=mesh, in_specs=(rowspec, rep1, rep1),
+                         out_specs=repn, check_rep=False)(
                              data, shard_ids, locals_)
 
     def scatter(data, shard_ids, locals_, rows):
@@ -237,16 +352,17 @@ def _sharded_ops(mesh, axis: str):
             return block[0].at[tgt].set(rw.astype(block.dtype),
                                         mode="drop")[None]
 
-        return shard_map(body, mesh=mesh, in_specs=(row5, rep1, rep1, rep4),
-                         out_specs=row5, check_rep=False)(
+        return shard_map(body, mesh=mesh,
+                         in_specs=(rowspec, rep1, rep1, repn),
+                         out_specs=rowspec, check_rep=False)(
                              data, shard_ids, locals_, rows)
 
     def grow(data):
         def body(block):
             return jnp.concatenate([block, jnp.zeros_like(block)], axis=1)
 
-        return shard_map(body, mesh=mesh, in_specs=(row5,),
-                         out_specs=row5, check_rep=False)(data)
+        return shard_map(body, mesh=mesh, in_specs=(rowspec,),
+                         out_specs=rowspec, check_rep=False)(data)
 
     # grow's output is twice its input — donation could never alias, it
     # would only emit "donated buffers were not usable" warnings
@@ -281,7 +397,10 @@ class ShardedTableStore:
         self.mesh_ctx = MeshCtx.wrap(mesh)
         self.axis = self.mesh_ctx.model_axis if axis is None else axis
         self.row_shape = (n_groups, n_buckets, d)
-        self.dtype = jnp.dtype(dtype)
+        self.dtype = jnp.dtype(resolve_table_dtype(dtype))
+        self.quantized = is_quantized(self.dtype)
+        self._check_range = (not self.quantized
+                             and _range(self.dtype) is not None)
         S = self.n_shards
         per = max(1, -(-capacity // S))                  # ceil; ≥1 per shard
         self._sharding = NamedSharding(
@@ -290,11 +409,24 @@ class ShardedTableStore:
             jnp.zeros((S, per, *self.row_shape), self.dtype), self._sharding)
         self._gather, self._scatter, self._grow_op = _sharded_ops(
             self.mesh_ctx.mesh, self.axis)
+        if self.quantized:
+            self._scale_sharding = NamedSharding(
+                self.mesh_ctx.mesh, P(self.axis, None, None, None))
+            self.scales = jax.device_put(
+                jnp.zeros((S, per, n_groups, n_buckets), jnp.float32),
+                self._scale_sharding)
+            self._sgather, self._sscatter, self._sgrow_op = _sharded_ops(
+                self.mesh_ctx.mesh, self.axis, rank=2)
+        else:
+            self.scales = None
         self._slot_of: dict[Any, tuple[int, int]] = {}
         self._user_of: dict[tuple[int, int], Any] = {}
         self._free = [list(range(per - 1, -1, -1)) for _ in range(S)]
         self.n_grows = 0
         self.n_evictions = 0
+        self.n_saturated = 0
+
+    _note_saturation = TableStore._note_saturation
 
     # ------------------------------------------------------------------
     # index
@@ -367,6 +499,8 @@ class ShardedTableStore:
     def grow(self) -> None:
         per = self.per_shard_capacity
         self.data = self._grow_op(self.data)
+        if self.quantized:
+            self.scales = self._sgrow_op(self.scales)
         for f in self._free:
             f[:0] = range(2 * per - 1, per - 1, -1)
         self.n_grows += 1
@@ -400,6 +534,9 @@ class ShardedTableStore:
         self._free = [list(range(per - 1, -1, -1))
                       for _ in range(self.n_shards)]
         self.data = jax.device_put(jnp.zeros_like(self.data), self._sharding)
+        if self.quantized:
+            self.scales = jax.device_put(jnp.zeros_like(self.scales),
+                                         self._scale_sharding)
         self.n_grows = 0
         self.n_evictions = 0
 
@@ -407,29 +544,79 @@ class ShardedTableStore:
     # rows
     # ------------------------------------------------------------------
     def rows(self, slots) -> jax.Array:
-        """One sharded gather: (B, 2) handles -> replicated (B, G, U, d)."""
+        """One sharded gather per array: (B, 2) handles -> replicated
+        (B, G, U, d); quantized stores gather payload + scales and
+        dequantize, so callers always see fp32 rows."""
         slots = jnp.asarray(slots, jnp.int32)
-        return self._gather(self.data, slots[:, 0], slots[:, 1])
+        payload = self._gather(self.data, slots[:, 0], slots[:, 1])
+        if self.quantized:
+            scales = self._sgather(self.scales, slots[:, 0], slots[:, 1])
+            return dequantize_rows(payload, scales)
+        return payload
 
     def row(self, user: Any) -> Optional[jax.Array]:
         s = self._slot_of.get(user)
         return None if s is None else self.rows(np.asarray([s], np.int32))[0]
 
     def write(self, slots, rows: jax.Array) -> None:
-        """One sharded scatter: overwrite (B, 2) handles with (B, G, U, d)."""
+        """One sharded scatter per array: overwrite (B, 2) handles with
+        (B, G, U, d) — quantize-on-write / saturating cast as TableStore."""
         slots = jnp.asarray(slots, jnp.int32)
+        if self.quantized:
+            payload, row_scales = quantize_rows(rows, dtype=self.dtype)
+            self.data = self._scatter(self.data, slots[:, 0], slots[:, 1],
+                                      payload)
+            self.scales = self._sscatter(self.scales, slots[:, 0],
+                                         slots[:, 1], row_scales)
+            return
+        if self._check_range:
+            rows, n = saturate_cast(rows, dtype=self.dtype)
+            self._note_saturation(int(n))
+        else:
+            rows = rows.astype(self.dtype)
+        self.data = self._scatter(self.data, slots[:, 0], slots[:, 1], rows)
+
+    # ------------------------------------------------------------------
+    # raw-byte seam (tier demotion/promotion must be bit-exact)
+    # ------------------------------------------------------------------
+    def rows_raw(self, slots) -> tuple[jax.Array, Optional[jax.Array]]:
+        """(B, 2) handles -> (stored payload in the STORAGE dtype, per-row
+        scales or None) — the sharded twin of ``TableStore.rows_raw``."""
+        slots = jnp.asarray(slots, jnp.int32)
+        payload = self._gather(self.data, slots[:, 0], slots[:, 1])
+        scales = (self._sgather(self.scales, slots[:, 0], slots[:, 1])
+                  if self.quantized else None)
+        return payload, scales
+
+    def write_raw(self, slots, payload: jax.Array,
+                  scales: Optional[jax.Array] = None) -> None:
+        slots = jnp.asarray(slots, jnp.int32)
+        assert payload.dtype == self.dtype, (payload.dtype, self.dtype)
         self.data = self._scatter(self.data, slots[:, 0], slots[:, 1],
-                                  rows.astype(self.dtype))
+                                  payload)
+        if self.quantized:
+            assert scales is not None
+            self.scales = self._sscatter(self.scales, slots[:, 0],
+                                         slots[:, 1],
+                                         jnp.asarray(scales, jnp.float32))
+        else:
+            assert scales is None
+
+    row_nbytes = TableStore.row_nbytes
 
     # ------------------------------------------------------------------
     # serialization seam (tiered snapshot/restore)
     # ------------------------------------------------------------------
     def host_state(self) -> dict:
         """Full store state as host objects: the (S, C, G, U, d) array (one
-        D2H copy) plus the user→(shard, local) index as json-able pairs."""
-        return {"data": np.asarray(self.data),
-                "index": [[u, [int(s[0]), int(s[1])]]
-                          for u, s in self._slot_of.items()]}
+        D2H copy) plus the user→(shard, local) index as json-able pairs
+        (quantized stores add the (S, C, G, U) scales)."""
+        state = {"data": np.asarray(self.data),
+                 "index": [[u, [int(s[0]), int(s[1])]]
+                           for u, s in self._slot_of.items()]}
+        if self.quantized:
+            state["scales"] = np.asarray(self.scales)
+        return state
 
     def load_host_state(self, state: dict) -> None:
         """Inverse of ``host_state``. The array must match this store's
@@ -440,6 +627,10 @@ class ShardedTableStore:
         assert data.shape[2:] == self.row_shape, (data.shape, self.row_shape)
         self.data = jax.device_put(jnp.asarray(data, self.dtype),
                                    self._sharding)
+        if self.quantized:
+            self.scales = jax.device_put(
+                jnp.asarray(np.asarray(state["scales"]), jnp.float32),
+                self._scale_sharding)
         self._slot_of = {u: (int(s[0]), int(s[1])) for u, s in state["index"]}
         self._user_of = {s: u for u, s in self._slot_of.items()}
         per = self.per_shard_capacity

@@ -34,6 +34,13 @@ tier stats — so a restarted server answers bit-identically without
 re-ingesting a single history (``BSEServer.snapshot`` adds the hash family
 ``R`` and serving stats on top).
 
+When the hot tier stores quantized tables (``dtype="int8"``/``"fp8"``, see
+``serve/quant.py``), every tier carries the raw payload **plus** the per-row
+fp32 scales: demotion reads ``rows_raw`` (payload bytes, ~4x fewer than
+fp32), the warm pool and cold segments hold payload+scales side by side,
+and promotion writes back through ``write_raw`` — a row is never
+re-quantized by tier movement, so demote→promote is bit-exact.
+
 The store is compute-free, like the stores it fronts: callers produce rows
 via ``SDIMEngine.encode``/``update`` and only route memory through here.
 User keys must be JSON-serializable scalars (int or str) — they are
@@ -253,12 +260,21 @@ class WarmPool:
     index with amortized-doubling growth — the same layout discipline as
     the device ``TableStore``, minus the device. Insertion order of the
     index doubles as demotion age, which is what ``oldest`` (the spill
-    order) reads."""
+    order) reads.
 
-    def __init__(self, row_shape, dtype, capacity: int = 64):
+    When the hot tier is quantized the pool holds the SAME representation —
+    the raw int8/fp8 payload plus a parallel (N, G, U) fp32 ``scales``
+    array — so demote/promote move ~4x fewer bytes and are bit-exact (a
+    row is never re-quantized by tier movement)."""
+
+    def __init__(self, row_shape, dtype, capacity: int = 64,
+                 quantized: bool = False):
         self.row_shape = tuple(row_shape)
         self.dtype = np.dtype(dtype)
+        self.quantized = quantized
         self.data = np.zeros((max(1, capacity), *self.row_shape), self.dtype)
+        self.scales = (np.zeros((max(1, capacity), *self.row_shape[:-1]),
+                                np.float32) if quantized else None)
         self._slot_of: dict[Any, int] = {}
         self._free = list(range(self.data.shape[0] - 1, -1, -1))
 
@@ -271,28 +287,44 @@ class WarmPool:
     def users(self) -> Iterator[Any]:
         return iter(self._slot_of)
 
-    def put(self, users: Sequence[Any], rows: np.ndarray) -> None:
+    def put(self, users: Sequence[Any], rows: np.ndarray,
+            scales: Optional[np.ndarray] = None) -> None:
         assert len(users) == len(rows), (len(users), rows.shape)
+        assert (scales is not None) == self.quantized
         while len(self._free) < len(users):
             n = self.data.shape[0]
             self.data = np.concatenate([self.data, np.zeros_like(self.data)])
+            if self.quantized:
+                self.scales = np.concatenate(
+                    [self.scales, np.zeros_like(self.scales)])
             self._free[:0] = range(2 * n - 1, n - 1, -1)
-        for u, row in zip(users, rows):
+        for i, (u, row) in enumerate(zip(users, rows)):
             assert u not in self._slot_of, f"user {u!r} already warm"
             s = self._free.pop()
             self._slot_of[u] = s
             self.data[s] = row
+            if self.quantized:
+                self.scales[s] = scales[i]
 
-    def take(self, users: Sequence[Any]) -> np.ndarray:
-        """Remove ``users`` and return their rows (B, G, U, d)."""
+    def take(self, users: Sequence[Any]
+             ) -> tuple[np.ndarray, Optional[np.ndarray]]:
+        """Remove ``users``; returns (rows (B, G, U, d), scales or None)."""
         slots = [self._slot_of.pop(u) for u in users]
-        rows = self.data[np.asarray(slots, np.int64)].copy()
+        idx = np.asarray(slots, np.int64)
+        rows = self.data[idx].copy()
+        scales = self.scales[idx].copy() if self.quantized else None
         self._free.extend(slots)
-        return rows
+        return rows, scales
 
     def peek(self, user) -> Optional[np.ndarray]:
+        """Dequantized fp32 view of one row (read-only debug surface)."""
         s = self._slot_of.get(user)
-        return None if s is None else self.data[s]
+        if s is None:
+            return None
+        if self.quantized:
+            return (self.data[s].astype(np.float32)
+                    * self.scales[s][..., None])
+        return self.data[s]
 
     def oldest(self, k: int) -> list:
         return list(self._slot_of)[:k]
@@ -301,16 +333,23 @@ class WarmPool:
         self._slot_of.clear()
         self._free = list(range(self.data.shape[0] - 1, -1, -1))
         self.data[:] = 0
+        if self.quantized:
+            self.scales[:] = 0
 
     # ---- snapshot seam -------------------------------------------------
     def host_state(self) -> dict:
-        return {"data": self.data,
-                "index": [[u, int(s)] for u, s in self._slot_of.items()]}
+        state = {"data": self.data,
+                 "index": [[u, int(s)] for u, s in self._slot_of.items()]}
+        if self.quantized:
+            state["scales"] = self.scales
+        return state
 
     def load_host_state(self, state: dict) -> None:
         data = np.asarray(state["data"])
         assert data.shape[1:] == self.row_shape, (data.shape, self.row_shape)
         self.data = np.array(data, self.dtype)
+        if self.quantized:
+            self.scales = np.array(np.asarray(state["scales"]), np.float32)
         self._slot_of = {u: int(s) for u, s in state["index"]}
         used = set(self._slot_of.values())
         self._free = [s for s in range(self.data.shape[0] - 1, -1, -1)
@@ -352,32 +391,45 @@ class ColdStore:
     def n_segments(self) -> int:
         return len(self._live)
 
-    def spill(self, users: Sequence[Any], rows: np.ndarray) -> None:
+    def spill(self, users: Sequence[Any], rows: np.ndarray,
+              scales: Optional[np.ndarray] = None) -> None:
         assert len(users) == len(rows), (len(users), rows.shape)
         seg = self._next
         self._next += 1
-        _atomic_npz(self._path(seg), rows=np.asarray(rows),
-                    users=np.asarray(json.dumps(list(users))))
+        arrays = {"rows": np.asarray(rows),
+                  "users": np.asarray(json.dumps(list(users)))}
+        if scales is not None:     # quantized tier: segments carry the scales
+            arrays["scales"] = np.asarray(scales)
+        _atomic_npz(self._path(seg), **arrays)
         for i, u in enumerate(users):
             assert u not in self._seg_of, f"user {u!r} already cold"
             self._seg_of[u] = (seg, i)
         self._live[seg] = len(users)
 
-    def load_remove(self, users: Sequence[Any]) -> np.ndarray:
+    def load_remove(self, users: Sequence[Any]
+                    ) -> tuple[np.ndarray, Optional[np.ndarray]]:
         """Promote: read ``users``' rows (each touched segment loaded once)
-        and drop them from the index."""
+        and drop them from the index. Returns ``(rows, scales-or-None)`` —
+        segments are self-describing, so scales come back iff they were
+        spilled with the rows."""
         by_seg: dict[int, list] = {}
         for u in users:
             seg, r = self._seg_of[u]
             by_seg.setdefault(seg, []).append((u, r))
-        rows = {}
+        rows, scales = {}, {}
         for seg, entries in by_seg.items():
             with np.load(self._path(seg)) as z:
                 data = z["rows"]
+                sdata = z["scales"] if "scales" in z.files else None
                 for u, r in entries:
                     rows[u] = np.array(data[r])
+                    if sdata is not None:
+                        scales[u] = np.array(sdata[r])
         self.remove(users)
-        return np.stack([rows[u] for u in users])
+        out_rows = np.stack([rows[u] for u in users])
+        out_scales = (np.stack([scales[u] for u in users])
+                      if len(scales) == len(users) else None)
+        return out_rows, out_scales
 
     def remove(self, users: Sequence[Any]) -> None:
         for u in users:
@@ -477,7 +529,8 @@ class TieredTableStore:
         # sharded capacity rounds up to S * ceil(hot_capacity / S)
         self.hot_capacity = self.hot.capacity
         self.warm = WarmPool(self.hot.row_shape, self.hot.dtype,
-                             capacity=self.hot_capacity)
+                             capacity=self.hot_capacity,
+                             quantized=self.hot.quantized)
         self.cold = None if store_dir is None else ColdStore(store_dir)
         self.warm_capacity = warm_capacity
         self.policy = make_policy(policy)
@@ -505,6 +558,16 @@ class TieredTableStore:
     @property
     def dtype(self):
         return self.hot.dtype
+
+    @property
+    def quantized(self) -> bool:
+        return self.hot.quantized
+
+    @property
+    def scales(self):
+        """Per-row quantization scales of the HOT tier (None unless
+        quantized) — what the fused serve kernel consumes."""
+        return self.hot.scales
 
     @property
     def data(self):
@@ -579,18 +642,31 @@ class TieredTableStore:
             self._demote(need - free, pinned=set(uniq))
         promote = warm_u + cold_u
         if promote:
-            parts = []
+            rparts, sparts = [], []
             if warm_u:
-                parts.append(self.warm.take(warm_u))
+                r, s = self.warm.take(warm_u)
+                rparts.append(r)
+                sparts.append(s)
             if cold_u:
-                parts.append(self.cold.load_remove(cold_u))
-            rows = parts[0] if len(parts) == 1 else np.concatenate(parts)
-            # ONE scatter promotes the whole batch
-            self.hot.write(self.hot.assign(promote), jnp.asarray(rows))
+                r, s = self.cold.load_remove(cold_u)
+                rparts.append(r)
+                sparts.append(s)
+            rows = rparts[0] if len(rparts) == 1 else np.concatenate(rparts)
+            scales = None
+            if self.hot.quantized:
+                assert all(s is not None for s in sparts), \
+                    "quantized store promoted rows without scales"
+                scales = (sparts[0] if len(sparts) == 1
+                          else np.concatenate(sparts))
+            # ONE scatter promotes the whole batch; rows move as the stored
+            # payload bytes (write_raw), so no re-quantization on promotion
+            self.hot.write_raw(self.hot.assign(promote), jnp.asarray(rows),
+                               None if scales is None else jnp.asarray(scales))
             self.stats.n_hot_scatters += 1
             self.stats.warm_promotions += len(warm_u)
             self.stats.cold_promotions += len(cold_u)
-            self.stats.promote_bytes += rows.nbytes
+            self.stats.promote_bytes += rows.nbytes + (
+                0 if scales is None else scales.nbytes)
         if new_u:
             self.hot.assign(new_u)     # fresh slots read zero; no device op
         for u in promote + new_u:
@@ -605,15 +681,19 @@ class TieredTableStore:
 
     def _demote(self, k: int, pinned: set) -> None:
         victims = self.policy.victims(k, exclude=pinned)
-        vrows = np.asarray(self.hot.rows(self.hot.slots(victims)))  # 1 gather
+        # 1 gather — raw payload bytes (int8 moves ~4x fewer bytes off HBM)
+        payload, scales = self.hot.rows_raw(self.hot.slots(victims))
+        vrows = np.asarray(payload)
+        vscales = None if scales is None else np.asarray(scales)
         self.stats.n_hot_gathers += 1
         self.hot.evict_many(victims)                           # 1 zero-scatter
         self.stats.n_hot_scatters += 1
         for v in victims:
             self.policy.remove(v)
-        self.warm.put(victims, vrows)
+        self.warm.put(victims, vrows, vscales)
         self.stats.demotions += k
-        self.stats.demote_bytes += vrows.nbytes
+        self.stats.demote_bytes += vrows.nbytes + (
+            0 if vscales is None else vscales.nbytes)
 
     def _spill_overflow(self) -> None:
         if self.warm_capacity is None or self.cold is None:
@@ -621,10 +701,11 @@ class TieredTableStore:
         excess = len(self.warm) - self.warm_capacity
         if excess > 0:
             old = self.warm.oldest(excess)
-            rows = self.warm.take(old)
-            self.cold.spill(old, rows)
+            rows, scales = self.warm.take(old)
+            self.cold.spill(old, rows, scales)
             self.stats.spills += excess
-            self.stats.spill_bytes += rows.nbytes
+            self.stats.spill_bytes += rows.nbytes + (
+                0 if scales is None else scales.nbytes)
 
     # ------------------------------------------------------------------
     # TableStore surface (residency-aware)
@@ -676,11 +757,26 @@ class TieredTableStore:
         if t == "cold":
             seg, r = self.cold._seg_of[user]
             with np.load(self.cold._path(seg)) as z:
-                return jnp.asarray(np.array(z["rows"][r]))
+                row = np.array(z["rows"][r])
+                if self.hot.quantized:
+                    row = (row.astype(np.float32)
+                           * np.array(z["scales"][r])[..., None])
+            return jnp.asarray(row)
         return None
 
     def write(self, slots, rows: jax.Array) -> None:
         self.hot.write(slots, rows)
+
+    def rows_raw(self, slots):
+        """Raw stored (payload, scales-or-None) of hot slots — the fused
+        serve kernel's input seam."""
+        return self.hot.rows_raw(slots)
+
+    def write_raw(self, slots, payload, scales=None) -> None:
+        self.hot.write_raw(slots, payload, scales)
+
+    def row_nbytes(self) -> int:
+        return self.hot.row_nbytes()
 
     def evict(self, user) -> bool:
         """Drop a user from whichever tier holds it (true deletion — the
@@ -719,8 +815,11 @@ class TieredTableStore:
         os.makedirs(dir, exist_ok=True)
         hot_state = self.hot.host_state()
         warm_state = self.warm.host_state()
-        _atomic_npz(os.path.join(dir, "tiers.npz"),
-                    hot=hot_state["data"], warm=warm_state["data"])
+        tier_arrays = {"hot": hot_state["data"], "warm": warm_state["data"]}
+        if self.hot.quantized:
+            tier_arrays["hot_scales"] = hot_state["scales"]
+            tier_arrays["warm_scales"] = warm_state["scales"]
+        _atomic_npz(os.path.join(dir, "tiers.npz"), **tier_arrays)
         cold_index = []
         if self.cold is not None:
             cold_dir = os.path.join(dir, "cold")
@@ -788,10 +887,13 @@ class TieredTableStore:
             raise ValueError(f"snapshot has {man['n_shards']} shards, mesh "
                              f"has {store.hot.n_shards}")
         with np.load(os.path.join(dir, "tiers.npz")) as z:
-            store.hot.load_host_state({"data": z["hot"],
-                                       "index": man["hot_index"]})
-            store.warm.load_host_state({"data": z["warm"],
-                                        "index": man["warm_index"]})
+            hot_state = {"data": z["hot"], "index": man["hot_index"]}
+            warm_state = {"data": z["warm"], "index": man["warm_index"]}
+            if store.hot.quantized:
+                hot_state["scales"] = z["hot_scales"]
+                warm_state["scales"] = z["warm_scales"]
+            store.hot.load_host_state(hot_state)
+            store.warm.load_host_state(warm_state)
         if man["has_cold"] and man["cold_index"]:
             store.cold.load_index_state(man["cold_index"])
         store.policy.load_state(man["policy"]["state"])

@@ -1,0 +1,213 @@
+"""Fused single-pass serve megakernel (ISSUE 6): ``kernels/sdim_fused_serve``
+slot-gathers, dequantizes and scores candidates in ONE dispatch.
+
+Parity chain pinned here, on BOTH backends (pallas in interpret mode
+off-TPU):
+
+    serve_fused == fetch-gather + engine.query == sdim_fused_serve_ref
+
+plus the ragged-present contract (absent users read exactly zero), the
+quantized path (per-row scales consumed in-kernel), the server integration
+(``BSEServer.serve_candidates`` == ``fetch_many`` + query; fused
+``CTRServer`` == unfused scores), and the 8-way sharded variant in a
+subprocess mesh (same contract as test_sharded_store.py).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import EngineConfig, SDIMEngine
+from repro.kernels.sdim_fused_serve.ref import sdim_fused_serve_ref
+from repro.serve.bse_server import BSEServer
+from repro.serve.table_store import TableStore
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+D = 16
+N_ITEMS, N_CATS = 64, 16
+_EMB_I = jax.random.normal(jax.random.PRNGKey(11), (N_ITEMS, D // 2))
+_EMB_C = jax.random.normal(jax.random.PRNGKey(12), (N_CATS, D // 2))
+BACKENDS = ["xla", "pallas"]
+
+
+def _embed(params, items, cats):
+    return jnp.concatenate([_EMB_I[jnp.asarray(items) % N_ITEMS],
+                            _EMB_C[jnp.asarray(cats) % N_CATS]], axis=-1)
+
+
+def _engine(backend="xla"):
+    return SDIMEngine(EngineConfig(
+        m=12, tau=2, d=D, backend=backend,
+        interpret=None if backend == "xla" else
+        jax.default_backend() != "tpu"))
+
+
+def _populated_store(eng, dtype="fp32", n=6, seed=0):
+    """A TableStore holding n real encoded bucket tables + its slot map."""
+    rng = np.random.default_rng(seed)
+    store = TableStore(eng.cfg.n_groups, eng.cfg.n_buckets, D,
+                       capacity=n, dtype=dtype)
+    seq = _embed(None, rng.integers(0, N_ITEMS, (n, 9)),
+                 rng.integers(0, N_CATS, (n, 9)))
+    store.write(store.assign(list(range(n))), eng.encode(seq))
+    return store, rng
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("dtype", ["fp32", "int8"])
+def test_serve_fused_matches_two_dispatch_and_ref(backend, dtype):
+    """The tentpole parity: one fused dispatch == gather + query, == the
+    pure-jnp oracle, for fp32 and quantized stores. Slots deliberately
+    permute and repeat (a gather, not a slice)."""
+    eng = _engine(backend)
+    store, rng = _populated_store(eng, dtype)
+    slots = jnp.asarray([3, 0, 5, 3], jnp.int32)          # repeats OK
+    q = jnp.asarray(rng.standard_normal((4, 3, D)), jnp.float32)
+    fused = eng.serve_fused(store.data, slots, q, scales=store.scales)
+    two = eng.query(q, store.rows(slots))                 # rows() dequantizes
+    ref = sdim_fused_serve_ref(store.data, slots, q, eng.R, eng.cfg.tau,
+                               scales=store.scales)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(two),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_serve_fused_ragged_present_mask(backend):
+    """Absent users (present=False) read EXACTLY zero — the fetch_many miss
+    contract — while present users are untouched by the masking."""
+    eng = _engine(backend)
+    store, rng = _populated_store(eng)
+    slots = jnp.asarray([0, 0, 2, 4], jnp.int32)          # misses clamp to 0
+    present = jnp.asarray([True, False, True, False])
+    q = jnp.asarray(rng.standard_normal((4, 2, D)), jnp.float32)
+    out = np.asarray(eng.serve_fused(store.data, slots, q, present=present))
+    full = np.asarray(eng.serve_fused(store.data, slots, q))
+    assert np.abs(out[[1, 3]]).max() == 0.0
+    np.testing.assert_array_equal(out[[0, 2]], full[[0, 2]])
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("dtype", ["fp32", "int8"])
+def test_serve_candidates_matches_fetch_many_query(backend, dtype):
+    """Server integration: ``serve_candidates`` (fused, misses included) ==
+    ``fetch_many`` + engine.query on the wire, same byte accounting."""
+    eng = _engine(backend)
+    srv = BSEServer(_embed, None, eng, wire_dtype=jnp.float32, capacity=4,
+                    table_dtype=dtype)
+    rng = np.random.default_rng(1)
+    srv.ingest_histories([0, 1, 2], rng.integers(0, N_ITEMS, (3, 9)),
+                         rng.integers(0, N_CATS, (3, 9)))
+    users = [2, "miss", 0, 1]                             # ragged: one miss
+    q = jnp.asarray(rng.standard_normal((4, 3, D)), jnp.float32)
+    fused = np.asarray(srv.serve_candidates(users, q))
+    tables = srv.fetch_many(users)
+    two = np.asarray(eng.query(q, jnp.asarray(tables, jnp.float32)))
+    np.testing.assert_allclose(fused, two, rtol=1e-5, atol=1e-5)
+    assert np.abs(fused[1]).max() == 0.0                  # the miss row
+    assert srv.stats.n_misses >= 1
+
+
+def test_ctr_server_fused_scores_match_unfused():
+    """End-to-end: a fused decoupled CTRServer returns the same per-request
+    scores as the unfused one (identical params, fp32 wire)."""
+    from repro.models.ctr import CTRModel, CTRConfig
+    from repro.core.interest import InterestConfig
+    from repro.serve.ctr_server import CTRServer
+
+    cfg = CTRConfig(arch="din", n_items=N_ITEMS, n_cats=N_CATS, long_len=24,
+                    short_len=8, mlp_hidden=(16,), embed_dim=8,
+                    interest=InterestConfig(kind="sdim", m=12, tau=2))
+    model = CTRModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(2)
+    servers = [CTRServer.build(model, params, "decoupled", capacity=4,
+                               wire_dtype=jnp.float32, fused=f)
+               for f in (False, True)]
+    reqs = []
+    for u in range(3):
+        hist = {"hist_items": rng.integers(0, N_ITEMS, (1, 24)),
+                "hist_cats": rng.integers(0, N_CATS, (1, 24)),
+                "hist_mask": np.ones((1, 24), np.float32)}
+        c = 2 + u                                          # ragged candidates
+        reqs.append((u, hist, rng.integers(0, N_ITEMS, c),
+                     rng.integers(0, N_CATS, c), np.zeros((c, 4), np.float32)))
+    base, fused = (s.handle_requests(reqs) for s in servers)
+    for a, b in zip(base, fused):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+    with pytest.raises(ValueError, match="fused"):
+        CTRServer.build(model, params, "inline", fused=True)
+
+
+# ---------------------------------------------------------------------------
+# sharded (8-way subprocess mesh, same contract as test_sharded_store.py)
+# ---------------------------------------------------------------------------
+def run_sub(code: str) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+PREAMBLE = """
+import jax, jax.numpy as jnp, numpy as np, json
+from repro.distributed.compat import make_auto_mesh
+from repro.core.engine import EngineConfig, SDIMEngine
+from repro.serve.bse_server import BSEServer
+
+D = 16
+EI = jax.random.normal(jax.random.PRNGKey(11), (64, D // 2))
+EC = jax.random.normal(jax.random.PRNGKey(12), (16, D // 2))
+def embed(params, items, cats):
+    return jnp.concatenate([EI[jnp.asarray(items) % 64],
+                            EC[jnp.asarray(cats) % 16]], axis=-1)
+
+def engine(backend):
+    return SDIMEngine(EngineConfig(
+        m=12, tau=2, d=D, backend=backend,
+        interpret=None if backend == "xla" else
+        jax.default_backend() != "tpu"))
+
+mesh = make_auto_mesh((8,), ("model",))
+"""
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("dtype", ["fp32", "int8"])
+def test_sharded_serve_candidates_matches_single(backend, dtype):
+    """On an 8-way mesh, the sharded fused path (per-shard gather + psum)
+    serves exactly what the single-device fused server serves, misses and
+    quantized stores included."""
+    out = run_sub(PREAMBLE + f"""
+backend, dtype = {backend!r}, {dtype!r}
+rng = np.random.default_rng(0)
+eng = engine(backend)
+single = BSEServer(embed, None, eng, wire_dtype=jnp.float32, capacity=4,
+                   table_dtype=dtype)
+sh = BSEServer(embed, None, eng, wire_dtype=jnp.float32, capacity=4,
+               table_dtype=dtype, mesh=mesh)
+users = list(range(11))                       # > capacity: forces growth
+items = rng.integers(0, 64, (11, 9))
+cats = rng.integers(0, 16, (11, 9))
+for s in (single, sh):
+    s.ingest_histories(users, items, cats)
+ask = [4, "miss", 9, 0, 4]                    # permuted, repeated, one miss
+q = jnp.asarray(rng.standard_normal((5, 3, D)), jnp.float32)
+a = np.asarray(single.serve_candidates(ask, q))
+b = np.asarray(sh.serve_candidates(ask, q))
+print(json.dumps({{"diff": float(np.abs(a - b).max()),
+                   "miss_zero": float(np.abs(b[1]).max()) == 0.0,
+                   "n_shards": sh.store.n_shards}}))
+""")
+    d = json.loads(out.splitlines()[-1])
+    assert d["diff"] < 1e-4, d
+    assert d["miss_zero"] and d["n_shards"] == 8, d

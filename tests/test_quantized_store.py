@@ -1,0 +1,239 @@
+"""Quantized bucket-table storage (ISSUE 6): per-row scales, quantize-on-
+write, bit-exact tier movement.
+
+The load-bearing properties:
+  * **round-trip bound** — write→read error is elementwise ≤ ``scale/2``
+    per bucket row (int8 rounding), zero rows round-trip exactly, and the
+    bound holds under hypothesis-fuzzed magnitudes spanning 12 orders;
+  * **bit-exactness across tiers** — demotion/promotion moves raw
+    payload+scales (``rows_raw``/``write_raw``), NEVER requantizes: a user
+    that bounced through warm/cold reads back the identical int8 table the
+    unbounded quantized store holds;
+  * **snapshot round-trips scales** — a restored tiered server is
+    array-equal on every tier, including the per-row scale arrays;
+  * **saturating cast** — narrow non-quantized float targets clip (and
+    count + warn) instead of silently wrapping (the old ``astype`` bug).
+"""
+import os
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import given, settings, st
+
+from repro.core.engine import EngineConfig, SDIMEngine
+from repro.serve.bse_server import BSEServer
+from repro.serve.quant import (TABLE_DTYPES, dequantize_rows, is_quantized,
+                               qmax, quantize_rows, resolve_table_dtype)
+from repro.serve.table_store import TableStore
+
+D = 16
+N_ITEMS, N_CATS = 64, 16
+_EMB_I = jax.random.normal(jax.random.PRNGKey(11), (N_ITEMS, D // 2))
+_EMB_C = jax.random.normal(jax.random.PRNGKey(12), (N_CATS, D // 2))
+QUANT_DTYPES = [n for n in ("int8", "fp8") if n in TABLE_DTYPES]
+# worst-case round-trip error in units of the per-row scale: int8 rounds to
+# the nearest integer step; fp8 e4m3's spacing near qmax=448 is 32 (half-
+# spacing 16, plus slack for the fp32 scale multiply's own rounding)
+_BOUND_FACTOR = {"int8": 0.5, "fp8": 16.5}
+
+
+def _embed(params, items, cats):
+    return jnp.concatenate([_EMB_I[jnp.asarray(items) % N_ITEMS],
+                            _EMB_C[jnp.asarray(cats) % N_CATS]], axis=-1)
+
+
+def _engine(backend="xla"):
+    return SDIMEngine(EngineConfig(
+        m=12, tau=2, d=D, backend=backend,
+        interpret=None if backend == "xla" else
+        jax.default_backend() != "tpu"))
+
+
+def _server(table_dtype, backend="xla", **kw):
+    return BSEServer(_embed, None, _engine(backend), wire_dtype=jnp.float32,
+                     capacity=8, table_dtype=table_dtype, **kw)
+
+
+def _rows(rng, b=3, g=2, u=4, d=D, span=4.0):
+    """Bucket rows whose per-row magnitudes span several decades (the
+    per-ROW-scale motivation: one per-table scale would crush small rows)."""
+    mag = 10.0 ** rng.uniform(-span / 2, span / 2, (b, g, u, 1))
+    return (rng.standard_normal((b, g, u, d)) * mag).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# quantize/dequantize round-trip bound
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", QUANT_DTYPES)
+def test_roundtrip_error_bounded_by_half_scale(name):
+    dtype = resolve_table_dtype(name)
+    rng = np.random.default_rng(0)
+    rows = _rows(rng)
+    payload, scales = quantize_rows(jnp.asarray(rows), dtype=dtype)
+    assert payload.dtype == jnp.dtype(dtype)
+    assert scales.shape == rows.shape[:-1] and scales.dtype == jnp.float32
+    back = np.asarray(dequantize_rows(payload, scales))
+    # int8 rounds to the nearest step (≤ scale/2); fp8 e4m3's mantissa
+    # spacing near qmax=448 is 32, so its worst case is 16·scale
+    bound = np.asarray(scales)[..., None] * _BOUND_FACTOR[name]
+    assert (np.abs(back - rows) <= bound + 1e-7).all()
+    # scale is exactly max|row| / qmax
+    np.testing.assert_allclose(np.asarray(scales),
+                               np.abs(rows).max(-1) / qmax(dtype),
+                               rtol=1e-6)
+
+
+def test_zero_rows_roundtrip_exactly_with_zero_scale():
+    rows = jnp.zeros((2, 2, 4, D))
+    payload, scales = quantize_rows(rows, dtype=jnp.int8)
+    assert float(jnp.abs(scales).max()) == 0.0
+    assert float(jnp.abs(payload).max()) == 0.0
+    assert float(jnp.abs(dequantize_rows(payload, scales)).max()) == 0.0
+
+
+@pytest.mark.slow
+@given(seed=st.integers(0, 2**31 - 1), span=st.floats(0.0, 12.0),
+       d=st.sampled_from([8, 16, 32]))
+@settings(max_examples=25, deadline=None)
+def test_property_roundtrip_bound_across_magnitudes(seed, span, d):
+    """The ≤ scale/2 bound holds for per-row magnitudes fuzzed across up to
+    12 decades — exactly the hot-bucket/empty-bucket spread that per-table
+    scaling would destroy."""
+    rng = np.random.default_rng(seed)
+    rows = _rows(rng, b=2, d=d, span=span)
+    payload, scales = quantize_rows(jnp.asarray(rows), dtype=jnp.int8)
+    back = np.asarray(dequantize_rows(payload, scales))
+    bound = np.asarray(scales)[..., None] * 0.5 + 1e-7
+    assert (np.abs(back - rows) <= bound).all()
+
+
+@pytest.mark.parametrize("name", QUANT_DTYPES)
+def test_store_write_read_roundtrip_and_bytes(name):
+    """TableStore quantizes on write: rows() dequantizes within the bound,
+    rows_raw() exposes the exact payload+scales, and row_nbytes() reflects
+    payload + fp32 scales (≥ 3.5x under fp32 for d ≥ 32)."""
+    rng = np.random.default_rng(1)
+    store = TableStore(2, 4, 32, capacity=4, dtype=name)
+    assert store.quantized and is_quantized(store.dtype)
+    rows = _rows(rng, b=3, d=32)
+    h = store.assign(["a", "b", "c"])
+    store.write(h, jnp.asarray(rows))
+    back = np.asarray(store.rows(h))
+    bound = (np.asarray(store.scales)[np.asarray(h)][..., None]
+             * _BOUND_FACTOR[name] + 1e-7)
+    assert (np.abs(back - rows) <= bound).all()
+    payload, scales = store.rows_raw(h)
+    np.testing.assert_array_equal(
+        np.asarray(dequantize_rows(payload, scales)), back)
+    fp32 = TableStore(2, 4, 32, capacity=4, dtype="fp32")
+    ratio = fp32.row_nbytes() / store.row_nbytes()
+    assert ratio >= 3.5, ratio
+
+
+def test_saturating_cast_clips_and_warns_once():
+    """The old bug: ``write`` did a silent ``astype`` so out-of-range
+    values wrapped to inf/garbage on narrow float targets. Now they clip
+    to the representable range, ``n_saturated`` counts them, and the FIRST
+    saturation warns (later ones only count)."""
+    store = TableStore(1, 2, 4, capacity=2, dtype=jnp.float16)
+    h = store.assign(["u"])
+    big = jnp.full((1, 1, 2, 4), 1e6)                 # fp16 max is 65504
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        store.write(h, big)
+        assert any("saturated" in str(x.message) for x in w)
+    assert store.n_saturated == 8
+    assert float(np.asarray(store.rows(h)).max()) == 65504.0
+    with warnings.catch_warnings(record=True) as w:   # counted, not re-warned
+        warnings.simplefilter("always")
+        store.write(h, -big)
+    assert not w and store.n_saturated == 16
+    assert float(np.asarray(store.rows(h)).min()) == -65504.0
+
+
+# ---------------------------------------------------------------------------
+# bit-exact tier movement + snapshot
+# ---------------------------------------------------------------------------
+def _ingest(servers, rng, n_users, chunk):
+    for lo in range(0, n_users, chunk):
+        us = list(range(lo, min(lo + chunk, n_users)))
+        items = rng.integers(0, N_ITEMS, (len(us), 9))
+        cats = rng.integers(0, N_CATS, (len(us), 9))
+        for s in servers:
+            s.ingest_histories(us, items, cats)
+
+
+def test_tier_movement_never_requantizes(tmp_path):
+    """Users bounced through warm/cold read back the IDENTICAL quantized
+    table the unbounded int8 store holds — tier movement is raw
+    payload+scales, so there is no second rounding step."""
+    rng = np.random.default_rng(2)
+    tiered = _server("int8", hot_capacity=4, warm_capacity=4,
+                     store_dir=os.path.join(str(tmp_path), "cold"),
+                     policy="clock")
+    flat = _server("int8")
+    _ingest([tiered, flat], rng, 16, 4)               # 16 users through hot=4
+    order = rng.permutation(16)
+    for lo in range(0, 16, 4):                        # promotes warm+cold rows
+        us = [int(u) for u in order[lo:lo + 4]]
+        a = np.asarray(tiered.fetch_many(us))
+        b = np.asarray(flat.fetch_many(us))
+        assert np.array_equal(a, b), f"tier movement requantized users {us}"
+    # the raw seam agrees too: payload + scales, not just the dequant
+    us = [int(u) for u in order[:4]]
+    tiered.fetch_many(us)                             # ensure hot residency
+    pa, sa = tiered.store.rows_raw(tiered.store.slots(us))
+    pb, sb = flat.store.rows_raw(flat.store.slots(us))
+    np.testing.assert_array_equal(np.asarray(pa), np.asarray(pb))
+    np.testing.assert_array_equal(np.asarray(sa), np.asarray(sb))
+
+
+def test_snapshot_roundtrips_scales(tmp_path):
+    """Snapshot→restore of a quantized tiered store is array-equal on every
+    tier AND on the per-row scale arrays (hot + warm carried in tiers.npz,
+    cold in the self-describing segment files)."""
+    rng = np.random.default_rng(3)
+    srv = _server("int8", hot_capacity=4, warm_capacity=4,
+                  store_dir=os.path.join(str(tmp_path), "cold"),
+                  policy="clock")
+    _ingest([srv], rng, 12, 4)
+    snap = os.path.join(str(tmp_path), "snap")
+    srv.snapshot(snap)
+    rest = BSEServer.restore(snap, _embed, None, _engine())
+    assert rest.store.quantized
+    np.testing.assert_array_equal(np.asarray(rest.store.scales),
+                                  np.asarray(srv.store.scales))
+    order = rng.permutation(12)
+    for lo in range(0, 12, 4):
+        us = [int(u) for u in order[lo:lo + 4]]
+        assert np.array_equal(np.asarray(srv.fetch_many(us)),
+                              np.asarray(rest.fetch_many(us)))
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_quantized_ingest_folds_events_like_history(backend):
+    """Quantized stores can't scatter-ADD int8 payloads in place, so
+    ``ingest_events`` dequantizes, folds the encoded deltas (duplicates
+    segment-summed host-side), and requantizes. The result must match the
+    fp32 store's fold within the quantization bound."""
+    rng = np.random.default_rng(4)
+    q8 = _server("int8", backend=backend)
+    q32 = _server("fp32", backend=backend)
+    items = rng.integers(0, N_ITEMS, (2, 6))
+    cats = rng.integers(0, N_CATS, (2, 6))
+    for s in (q8, q32):
+        s.ingest_histories([0, 1], items, cats)
+    ev_u = [0, 1, 0, 0]                               # duplicates fold once
+    ei = rng.integers(0, N_ITEMS, 4)
+    ec = rng.integers(0, N_CATS, 4)
+    for s in (q8, q32):
+        s.ingest_events(ev_u, ei, ec)
+    a = np.asarray(q8.fetch_many([0, 1]))
+    b = np.asarray(q32.fetch_many([0, 1]))
+    slots = q8.store.slots([0, 1])
+    bound = np.asarray(q8.store.scales)[np.asarray(slots)][..., None] + 1e-6
+    assert (np.abs(a - b) <= bound).all()

@@ -1,0 +1,124 @@
+#!/usr/bin/env python
+"""CI gate for BENCH_serving.json (written by benchmarks/table5_serving.py).
+
+Fails (exit 1) when the file is missing, unparseable, or structurally
+malformed: every serving variant must report finite positive users/sec and
+ordered latency percentiles, the quantization block must carry the
+bytes-ratio and AUC-parity measurements, and tier hit-rates must be
+probabilities. Thresholds (1.5x speedup, 3.5x bytes, 1e-3 AUC gap) are
+PR-acceptance numbers measured on dedicated hardware — this check pins the
+*schema* so a silently-skipped section can't pass CI, without making CI
+flaky on loaded machines.
+
+Usage: python tools/bench_check.py [path/to/BENCH_serving.json]
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import sys
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+DEFAULT_PATH = os.path.join(REPO_ROOT, "BENCH_serving.json")
+VARIANTS = ("two_dispatch", "fused", "fused_int8")
+PCTS = ("p50_ms", "p95_ms", "p99_ms")
+
+
+class Malformed(Exception):
+    pass
+
+
+def _num(d: dict, key: str, lo: float = None, hi: float = None,
+         where: str = "") -> float:
+    v = d.get(key)
+    if not isinstance(v, (int, float)) or isinstance(v, bool) \
+            or not math.isfinite(v):
+        raise Malformed(f"{where}.{key}: expected finite number, got {v!r}")
+    if lo is not None and v < lo:
+        raise Malformed(f"{where}.{key}={v} below {lo}")
+    if hi is not None and v > hi:
+        raise Malformed(f"{where}.{key}={v} above {hi}")
+    return float(v)
+
+
+def check(bench: dict) -> list[str]:
+    """Validate the parsed benchmark dict; returns human-readable summary
+    lines (raises Malformed on any structural problem)."""
+    if bench.get("schema") != 1:
+        raise Malformed(f"schema: expected 1, got {bench.get('schema')!r}")
+    lines = []
+
+    backends = bench.get("backends")
+    if not isinstance(backends, dict) or not backends:
+        raise Malformed("backends: expected non-empty dict")
+    for bk, st in backends.items():
+        where = f"backends.{bk}"
+        if not isinstance(st, dict):
+            raise Malformed(f"{where}: expected dict")
+        _num(st, "n_users", lo=1, where=where)
+        for var in VARIANTS:
+            if not isinstance(st.get(var), dict):
+                raise Malformed(f"{where}.{var}: missing variant block")
+            _num(st[var], "users_per_sec", lo=1e-9, where=f"{where}.{var}")
+            p = [_num(st[var], k, lo=0, where=f"{where}.{var}") for k in PCTS]
+            if not p[0] <= p[1] <= p[2]:
+                raise Malformed(f"{where}.{var}: percentiles not ordered {p}")
+        sp = _num(st, "speedup_fused_vs_two_dispatch", lo=1e-9, where=where)
+        lines.append(f"{bk}: fused {sp:.2f}x two-dispatch "
+                     f"({st['fused']['users_per_sec']:.0f} users/s, "
+                     f"p99 {st['fused']['p99_ms']}ms)")
+
+    q = bench.get("quantization")
+    if not isinstance(q, dict):
+        raise Malformed("quantization: expected dict")
+    where = "quantization"
+    _num(q, "table_bytes_fp32", lo=1, where=where)
+    _num(q, "table_bytes_int8", lo=1, where=where)
+    ratio = _num(q, "bytes_ratio", lo=1e-9, where=where)
+    a32 = _num(q, "auc_fp32_unfused", lo=0.0, hi=1.0, where=where)
+    a8 = _num(q, "auc_int8_fused", lo=0.0, hi=1.0, where=where)
+    gap = _num(q, "auc_gap", lo=0.0, hi=1.0, where=where)
+    lines.append(f"int8: {ratio:.2f}x smaller tables, "
+                 f"AUC {a32:.4f} -> {a8:.4f} (gap {gap:.1e})")
+
+    rl = bench.get("roofline")
+    if not isinstance(rl, dict) or not rl:
+        raise Malformed("roofline: expected non-empty dict")
+    for k in rl:
+        _num(rl, k, lo=0, where="roofline")
+
+    hr = bench.get("hit_rate")
+    if not isinstance(hr, dict) or not hr:
+        raise Malformed("hit_rate: expected non-empty dict")
+    for bk in hr:
+        _num(hr, bk, lo=0.0, hi=1.0, where="hit_rate")
+    lines.append("hit_rate: " + ", ".join(f"{k}={v:.2f}"
+                                          for k, v in sorted(hr.items())))
+    return lines
+
+
+def main(argv: list[str]) -> int:
+    path = argv[1] if len(argv) > 1 else DEFAULT_PATH
+    if not os.path.exists(path):
+        print(f"bench_check: {path} missing — run "
+              f"`make bench-smoke` (benchmarks/table5_serving.py writes it)",
+              file=sys.stderr)
+        return 1
+    try:
+        with open(path) as f:
+            bench = json.load(f)
+        lines = check(bench)
+    except (json.JSONDecodeError, Malformed) as e:
+        print(f"bench_check: {path} malformed: {e}", file=sys.stderr)
+        return 1
+    print(f"bench_check: {os.path.relpath(path, REPO_ROOT)} OK "
+          f"(generated {bench.get('generated_utc', '?')}, "
+          f"quick={bench.get('quick')})")
+    for ln in lines:
+        print(f"  {ln}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
