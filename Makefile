@@ -2,7 +2,8 @@
 # runs EVERY benchmarks/*.py module at pipeline-proof depth (training
 # benchmarks shrink to a few dozen steps; the serving benchmark covers both
 # engine backends, the fused megakernel + int8 quantized variants, the
-# sharded store and the tiered capacity-pressure section) and then gates on
+# sharded store, the async-ingest mixed workload and the tiered
+# capacity-pressure section) and then gates on
 # `tools/bench_check.py`: table5 must have written a well-formed
 # BENCH_serving.json at the repo root or CI fails.
 # `test-fast` skips the slow property/parity suites (no hypothesis

@@ -34,6 +34,15 @@ graded synthetic data. Both sections feed ``BENCH_serving.json`` at the
 repo root (schema checked by ``tools/bench_check.py`` — ``make ci`` fails
 if it is missing or malformed).
 
+The **ingest** section measures the async ingestion runtime
+(``serve/ingest.py``) under a mixed read/write workload: Poisson event
+arrivals submitted while Zipf-distributed fetch bursts are served, with the
+writer loop folding concurrently. It records read-only vs under-ingest
+serve-latency percentiles (the acceptance bound is under-ingest p95 within
+1.2x of read-only p95 — reads gather from the committed view and never join
+a fold), folded events/sec, backpressure drops, and the staleness p95, all
+into ``BENCH_serving.json``.
+
 The **capacity-pressure** section measures the tiered store
 (``serve/tiered_store.py``): Zipf-distributed traffic over a working set
 4x the device-hot capacity, so every burst promotes from the host warm pool
@@ -65,7 +74,7 @@ def run(quick: bool = True):
              "generated_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ",
                                             time.gmtime()),
              "backends": {}, "quantization": {}, "roofline": {},
-             "hit_rate": {}}
+             "hit_rate": {}, "ingest": {}}
     T = 2000
     B = 256 if quick else 1024
     n_req = 5 if quick else 20
@@ -117,6 +126,7 @@ def run(quick: bool = True):
     rows.extend(fused_rows(quick, bench))
     rows.extend(auc_parity_rows(quick, bench))
     rows.extend(sharded_rows(quick))
+    rows.extend(ingest_rows(quick, bench))
     rows.extend(pressure_rows(quick, bench))
     _write_bench_json(bench)
     return rows
@@ -537,6 +547,124 @@ def sharded_rows(quick: bool = True, n_users: int = 512,
                  "derived": f"sharded={ev:.0f}/s_single={ev1:.0f}/s"
                             f"_capacity_scales_{S}x"})
     return rows
+
+
+def ingest_rows(quick: bool = True, bench: dict = None) -> list[dict]:
+    """Async ingestion under a mixed read/write workload: the writer loop
+    folds Poisson-arriving events while the main thread serves Zipf fetch
+    bursts off the committed view. The workload is OPEN-LOOP — bursts are
+    spaced by exponential think time rather than issued back-to-back, which
+    is the correct methodology for a latency claim (a closed loop saturates
+    the host and measures throughput, not serving latency). The read-only
+    baseline runs the identical request schedule with no events flowing.
+    Reports read-only vs under-ingest fetch latency (the §4.4 claim:
+    ingestion is latency-free for serving — reads never join a fold; bound:
+    under-ingest p95 within 1.2x of read-only p95), folded events/sec,
+    drops, and staleness. XLA backend only: the contention being measured
+    is host-thread + dispatch, which the interpret-mode Pallas simulator
+    would drown in python."""
+    from repro.core.engine import EngineConfig, SDIMEngine
+    from repro.serve.bse_server import BSEServer
+
+    d = 16
+    N = 256                       # users, all device-hot (unbounded store)
+    C = 64                        # Zipf fetch burst
+    L = 32
+    n_bursts = 80 if quick else 240
+    lam = 32                      # mean Poisson event arrivals per burst
+    gap_s = 0.03                  # mean exponential think time between bursts
+    emb_i = jax.random.normal(jax.random.PRNGKey(11), (4000, d // 2))
+    emb_c = jax.random.normal(jax.random.PRNGKey(12), (50, d // 2))
+
+    def embed(params, items, cats):
+        return jnp.concatenate([emb_i[jnp.asarray(items) % 4000],
+                                emb_c[jnp.asarray(cats) % 50]], axis=-1)
+
+    eng = SDIMEngine(EngineConfig(m=24, tau=3, d=d, backend="xla"))
+    srv = BSEServer(embed, None, eng, capacity=N, wire_dtype=jnp.float32,
+                    async_ingest=True, queue_depth=8192, max_staleness=512,
+                    drain_batch=256)
+    rt = srv.async_ingest
+    # linger: batch many bursts of arrivals per fold, so the serving path
+    # contends with a handful of folds per run, not one per burst
+    rt.linger_s = 0.5
+    rng = np.random.default_rng(0)
+    srv.ingest_histories(list(range(N)), rng.integers(0, 4000, (N, L)),
+                         rng.integers(0, 50, (N, L)))
+    rt.flush()                                      # bootstrap committed
+    p = 1.0 / (np.arange(1, N + 1) ** 1.1)          # Zipf(1.1) fetch traffic
+    p /= p.sum()
+    bursts = [[int(u) for u in rng.choice(N, size=C, p=p)]
+              for _ in range(n_bursts)]
+    arrivals = rng.poisson(lam, n_bursts)           # events between bursts
+    ev_users = [[int(u) for u in rng.choice(N, size=max(int(k), 1), p=p)]
+                for k in arrivals]
+    gaps = rng.exponential(gap_s, n_bursts)
+
+    jax.block_until_ready(srv.fetch_many(bursts[0]))         # warm fetch jit
+    srv.ingest_events(ev_users[0], rng.integers(0, 4000, len(ev_users[0])),
+                      rng.integers(0, 50, len(ev_users[0])))
+    rt.flush()                                               # warm fold jits
+
+    lat = []                                                 # read-only
+    for b, g in zip(bursts, gaps):
+        tb = time.perf_counter()
+        jax.block_until_ready(srv.fetch_many(b))
+        lat.append(time.perf_counter() - tb)
+        time.sleep(g)
+    read_p50 = 1e3 * float(np.percentile(lat, 50))
+    read_p95 = 1e3 * float(np.percentile(lat, 95))
+
+    rt.stats = type(rt.stats)()                              # mixed phase
+    rt.start()
+    submitted = 0
+    lat = []
+    t0 = time.perf_counter()
+    for b, us, g in zip(bursts, ev_users, gaps):
+        submitted += srv.ingest_events(
+            us, rng.integers(0, 4000, len(us)), rng.integers(0, 50, len(us)))
+        time.sleep(g)
+        tb = time.perf_counter()
+        jax.block_until_ready(srv.fetch_many(b))
+        lat.append(time.perf_counter() - tb)
+    wall = time.perf_counter() - t0
+    rt.stop(flush=True)
+    mixed_p50 = 1e3 * float(np.percentile(lat, 50))
+    mixed_p95 = 1e3 * float(np.percentile(lat, 95))
+    st = rt.stats
+    eps = st.n_events_folded / wall
+    ratio = mixed_p95 / max(read_p95, 1e-9)
+    if bench is not None:
+        bench["ingest"] = {
+            "n_users": N, "burst": C, "n_bursts": n_bursts,
+            "poisson_lambda": lam,
+            "read_only": {"p50_ms": round(read_p50, 3),
+                          "p95_ms": round(read_p95, 3)},
+            "under_ingest": {"p50_ms": round(mixed_p50, 3),
+                             "p95_ms": round(mixed_p95, 3)},
+            "p95_ratio": round(ratio, 3),
+            "events_per_sec": round(eps, 1),
+            "events_submitted": int(submitted),
+            "events_folded": int(st.n_events_folded),
+            "n_dropped": int(st.n_dropped),
+            "n_folds": int(st.n_folds),
+            "max_queue_depth": int(st.max_queue_depth),
+            "max_drain_batch": int(st.max_drain_batch),
+            "staleness_p95": round(st.staleness_p95(), 2),
+        }
+    return [
+        {"name": "table5/ingest/serve_latency",
+         "us_per_call": 1e3 * mixed_p95, "shards": 1,
+         "derived": f"under_ingest_p95={mixed_p95:.2f}ms"
+                    f"_read_only_p95={read_p95:.2f}ms_ratio={ratio:.2f}x"
+                    f"_(bound_1.2x)_p50={mixed_p50:.2f}ms"},
+        {"name": "table5/ingest/events_per_sec",
+         "us_per_call": 1e6 / max(eps, 1e-9), "shards": 1,
+         "derived": f"folded={eps:.0f}/s_submitted={submitted}"
+                    f"_dropped={st.n_dropped}_folds={st.n_folds}"
+                    f"_max_queue={st.max_queue_depth}"
+                    f"_staleness_p95={st.staleness_p95():.1f}"},
+    ]
 
 
 def pressure_rows(quick: bool = True, bench: dict = None) -> list[dict]:

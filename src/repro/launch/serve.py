@@ -12,6 +12,10 @@ over a device mesh's model axis. On a CPU host, fake the devices first:
 ``--hot-capacity K --store-dir D --policy clock`` swaps in the tiered store
 (serve/tiered_store.py): at most K users stay device-resident, the rest
 demote to a host pool and spill to ``.npz`` segments under D.
+
+``--async-ingest`` (with ``--queue-depth``/``--max-staleness``) runs BSE
+ingestion on a writer thread off the request path (serve/ingest.py):
+reads serve the last committed table version and never block on a fold.
 """
 from __future__ import annotations
 
@@ -104,13 +108,25 @@ def main():
                    help="serve micro-batches through the fused megakernel "
                         "(one gather+dequant+query dispatch instead of "
                         "fetch_many + model-side query)")
+    p.add_argument("--async-ingest", action="store_true",
+                   help="run BSE ingestion off the request path: submits "
+                        "enqueue onto a bounded queue drained by a writer "
+                        "thread; reads serve the last committed version "
+                        "(serve/ingest.py)")
+    p.add_argument("--queue-depth", type=int, default=1024,
+                   help="async ingest queue bound; submits past it are "
+                        "dropped and counted, never blocked on")
+    p.add_argument("--max-staleness", type=int, default=64,
+                   help="max un-folded entries per user before a submit "
+                        "folds inline (bounds how stale a served table "
+                        "can be)")
     p.add_argument("--tokens", type=int, default=32, help="LM decode steps")
     p.add_argument("--sdim-kv", action="store_true",
                    help="LM: SDIM bucket-compressed KV decode")
     args = p.parse_args()
 
     from repro.serve.quant import TABLE_DTYPES, resolve_table_dtype
-    from repro.serve.tiered_store import DEFAULT_HOT_CAPACITY, is_tiered
+    from repro.serve.tiered_store import is_tiered
 
     if args.table_dtype not in TABLE_DTYPES:
         p.error(f"--table-dtype {args.table_dtype!r} not available; have "
@@ -138,16 +154,19 @@ def main():
     if args.fused_serve and args.micro_batch < 2:
         p.error("--fused-serve rides the micro-batched path; give "
                 "--micro-batch >= 2")
-    if tiered:
-        # the implicit bound when --store-dir/--policy tier the store
-        # without an explicit --hot-capacity
-        hot_eff = (DEFAULT_HOT_CAPACITY if args.hot_capacity is None
-                   else args.hot_capacity)
-        if args.micro_batch > hot_eff:
-            p.error(f"--micro-batch {args.micro_batch} exceeds the hot-tier "
-                    f"capacity {hot_eff}"
-                    f"{' (default)' if args.hot_capacity is None else ''}: "
-                    f"a burst can touch at most hot-capacity distinct users")
+    if mod.FAMILY != "recsys" and args.async_ingest:
+        p.error(f"--async-ingest decouples the BSE write path (recsys "
+                f"serving only); arch {args.arch!r} is family "
+                f"{mod.FAMILY!r}")
+    if args.queue_depth < 1:
+        p.error(f"--queue-depth must be >= 1, got {args.queue_depth}")
+    if args.max_staleness < 1:
+        p.error(f"--max-staleness must be >= 1, got {args.max_staleness}")
+    # NOTE: --micro-batch may exceed --hot-capacity: BSEServer auto-chunks
+    # oversized bursts into hot-capacity-sized sub-bursts (extra dispatches,
+    # same scores), so no launcher-level rejection is needed
+    if tiered and args.hot_capacity is not None and args.hot_capacity < 1:
+        p.error(f"--hot-capacity must be >= 1, got {args.hot_capacity}")
     if mod.FAMILY == "recsys":
         from repro.data.synthetic import SyntheticCTRConfig, generate_batch
         from repro.models.ctr import CTRModel
@@ -172,6 +191,10 @@ def main():
             p.error(f"--table-dtype/--fused-serve configure the BSE table "
                     f"store, which only the decoupled (sdim) deployment has; "
                     f"arch {args.arch!r} serves {mode!r}")
+        if mode != "decoupled" and args.async_ingest:
+            p.error(f"--async-ingest decouples the BSE write path, which "
+                    f"only the decoupled (sdim) deployment has; arch "
+                    f"{args.arch!r} serves {mode!r}")
         mesh_ctx = (build_mesh(args.shards, args.mesh, err=p.error)
                     if mode == "decoupled" else None)
         server = CTRServer.build(model, params, mode, mesh=mesh_ctx,
@@ -179,8 +202,13 @@ def main():
                                  store_dir=args.store_dir, policy=args.policy,
                                  warm_capacity=args.warm_capacity,
                                  table_dtype=table_dtype,
-                                 fused=args.fused_serve)
+                                 fused=args.fused_serve,
+                                 async_ingest=args.async_ingest,
+                                 queue_depth=args.queue_depth,
+                                 max_staleness=args.max_staleness)
         bse = server.bse
+        if args.async_ingest:
+            bse.async_ingest.start()
         if cfg.interest.kind == "sdim":
             print(f"SDIM engine backend: {model.engine.backend}"
                   f"{' (interpret)' if model.engine.backend == 'pallas' and model.engine.interpret else ''}")
@@ -228,6 +256,16 @@ def main():
                   f"(score {float(jnp.max(scores)):+.3f})")
         if pending:
             flush()
+        if bse and bse.async_ingest is not None:
+            bse.async_ingest.stop(flush=True)   # quiesce before reporting
+            ist = bse.async_ingest.stats
+            print(f"async ingest: {ist.n_enqueued} enqueued, "
+                  f"{ist.n_events_folded + ist.n_histories_folded} folded "
+                  f"in {ist.n_folds} drains "
+                  f"(max batch {ist.max_drain_batch}, "
+                  f"max queue {ist.max_queue_depth}), "
+                  f"{ist.n_dropped} dropped, "
+                  f"staleness p95 {ist.staleness_p95():.1f}")
         if bse:
             print(f"{server.stats.ms_per_request:.1f} ms/request"
                   f"{' (fused serve)' if args.fused_serve else ''}; "

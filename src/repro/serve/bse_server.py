@@ -20,12 +20,31 @@ Responsibilities modeled faithfully:
     matches the array actually transmitted — and the CTR server really
     scores with wire-precision buckets.
 
+The class is split along the paper's own deployment seam (§4.4: BSE runs
+OFF the CTR request path) into two halves that share only the table store
+and the stats counters:
+
+  * ``BSEIngestor`` — the write path: embeds behaviors with the current
+    params and folds them into the store (``ingest_histories`` /
+    ``ingest_events``). Oversized bursts are auto-chunked to the tiered
+    store's ``hot_capacity`` bound (extra dispatches, never a ValueError
+    out of the request path).
+  * ``BSEFetcher`` — the read path: ``fetch``/``fetch_many``/
+    ``serve_candidates`` against the store; with an ``AsyncIngestor``
+    attached (``serve/ingest.py``), reads resolve against the last
+    COMMITTED version of the hot state instead of the live store, so they
+    never block on (or observe) an in-flight fold.
+
+``BSEServer`` remains the facade composing both halves — every existing
+call site keeps working — and ``async_ingest=True`` inserts the queue +
+writer-loop runtime between them.
+
 All SDIM compute goes through an ``SDIMEngine``, so the server follows the
 engine's backend (XLA reference vs fused Pallas kernels) without any
 server-side branching.
 
 The embedding of raw behavior ids depends on the CTR model's current tables,
-so the server holds an ``embed_fn`` + params snapshot; ``refresh_params``
+so the ingestor holds an ``embed_fn`` + params snapshot; ``refresh_params``
 models the model-push cycle after each training deployment (the whole store
 is invalidated — index emptied, array zeroed — and re-encoded lazily).
 
@@ -41,7 +60,11 @@ Storage backends (the ``serve/`` storage seam):
 Unknown-user contract: ``fetch_many`` returns an all-zero row for a user no
 tier knows (counted in ``stats.n_misses``) — never a garbage slot gather,
 never an exception; callers that want the user served ingest its history
-first (``CTRServer.handle_requests`` does exactly that).
+first (``CTRServer.handle_requests`` does exactly that). Under async
+ingestion the same contract extends to NOT-YET-COMMITTED users: they read
+as zero-row misses until the writer loop folds and commits them (bounded
+staleness), and each miss enqueues a promotion touch so tiered stores pull
+the user hot off the request path.
 """
 from __future__ import annotations
 
@@ -58,7 +81,8 @@ import numpy as np
 from repro.core.engine import SDIMEngine
 from repro.serve.table_store import ShardedTableStore, TableStore
 from repro.serve.tiered_store import (TieredTableStore, _atomic_json,
-                                      _atomic_npz, is_tiered)
+                                      _atomic_npz, burst_cap, burst_chunks,
+                                      is_tiered)
 
 
 @dataclasses.dataclass
@@ -97,6 +121,234 @@ class _TablesView:
         return (self[u] for u in self._store.users())
 
 
+class BSEIngestor:
+    """Write half of the BSE server: embed behaviors, fold them into the
+    shared table store. Owns the params snapshot (embeddings change on
+    model push); shares ONLY the store and the stats counters with the
+    read half.
+
+    ``donate=False`` (set by the async runtime) makes every device write
+    copy-on-write instead of donating buffers, so committed reader
+    snapshots taken before a fold stay valid during and after it.
+    """
+
+    def __init__(self, embed_fn: Callable, params: Any, engine: SDIMEngine,
+                 R: jax.Array, store: Any, stats: BSEStats):
+        self.embed_fn = embed_fn
+        self.params = params
+        self.engine = engine
+        self.R = R
+        self.store = store
+        self.stats = stats
+        self.donate = True
+
+    def ingest_histories(self, users: Sequence[Any], items: np.ndarray,
+                         cats: np.ndarray,
+                         masks: Optional[np.ndarray] = None) -> None:
+        """Batched full (re-)encode: B distinct users' histories (B, L) in
+        ONE ``engine.encode`` dispatch, scattered into their slots. A burst
+        wider than the tiered store's hot capacity is auto-chunked into
+        sub-bursts of ≤ ``hot_capacity`` users (more dispatches, same
+        result)."""
+        assert len(set(users)) == len(users), "duplicate users in one encode"
+        cap = burst_cap(self.store)
+        if cap is not None and len(users) > cap:
+            items, cats = np.asarray(items), np.asarray(cats)
+            for lo, hi in burst_chunks(list(users), cap):
+                self.ingest_histories(
+                    users[lo:hi], items[lo:hi], cats[lo:hi],
+                    None if masks is None else np.asarray(masks)[lo:hi])
+            return
+        t0 = time.perf_counter()
+        seq_e = self.embed_fn(self.params, np.asarray(items), np.asarray(cats))
+        m = jnp.asarray(masks) if masks is not None else None
+        tables = self.engine.encode(seq_e, m, R=self.R)       # (B, G, U, d)
+        tables.block_until_ready()
+        self.stats.encode_time_s += time.perf_counter() - t0
+        self.stats.n_encodes += len(users)
+        # assign_fresh: every row is overwritten below, so a tiered store
+        # drops stale warm/cold copies instead of promoting them
+        self.store.write(self.store.assign_fresh(users), tables)
+
+    def ingest_events(self, users: Sequence[Any], items: np.ndarray,
+                      cats: np.ndarray,
+                      mask: Optional[np.ndarray] = None) -> None:
+        """Batched real-time events: one event-block per user — items/cats
+        (B,) or (B, E) — folded into the store in ONE ``engine.update``
+        dispatch. Users may repeat (duplicate slots accumulate); unseen
+        users start from a zero table. Bursts touching more distinct users
+        than the hot tier holds are auto-chunked like
+        ``ingest_histories``."""
+        items = np.asarray(items)
+        cats = np.asarray(cats)
+        mask = None if mask is None else np.asarray(mask)
+        if items.ndim == 1:
+            items, cats = items[:, None], cats[:, None]
+            mask = None if mask is None else mask[:, None]
+        if mask is not None:
+            assert mask.shape == items.shape, (mask.shape, items.shape)
+        cap = burst_cap(self.store)
+        if cap is not None and len(set(users)) > cap:
+            for lo, hi in burst_chunks(list(users), cap):
+                self.ingest_events(
+                    users[lo:hi], items[lo:hi], cats[lo:hi],
+                    None if mask is None else mask[lo:hi])
+            return
+        ev_e = self.embed_fn(self.params, items, cats)        # (B, E, d)
+        m = None if mask is None else jnp.asarray(mask)
+        slots = self.store.assign(users)
+        if self.store.quantized:
+            # int8/fp8 payloads can't take an in-place scatter-add (the raw
+            # bytes are meaningless without their scales): encode the event
+            # deltas, fold duplicates, then read-modify-write the touched
+            # rows — one dequantizing gather + one requantizing scatter
+            deltas = self.engine.encode(ev_e, m, R=self.R)    # (B, G, U, d)
+            uniq, inv = np.unique(np.asarray(slots), axis=0,
+                                  return_inverse=True)
+            deltas = jax.ops.segment_sum(deltas, jnp.asarray(inv.ravel()),
+                                         num_segments=len(uniq))
+            self.store.write(uniq, self.store.rows(uniq) + deltas)
+        elif self.store.sharded:
+            self.store.data = self.engine.update_sharded(
+                self.store.data, slots, ev_e, m, R=self.R,
+                mesh=self.store.mesh_ctx, donate=self.donate)
+        else:
+            self.store.data = self.engine.update(self.store.data, slots,
+                                                 ev_e, m, R=self.R,
+                                                 donate=self.donate)
+        self.stats.n_updates += int(items.size if mask is None
+                                    else np.sum(np.asarray(mask) > 0))
+
+
+class BSEFetcher:
+    """Read half of the BSE server: gather / fused-score against the table
+    store, cast to the wire dtype, account bytes. With an ``AsyncIngestor``
+    attached, every read resolves against the last COMMITTED version of the
+    hot state (``serve/ingest.py``) — lock-free, never blocked by an
+    in-flight fold — and misses enqueue promotion touches instead of
+    promoting inline."""
+
+    def __init__(self, engine: SDIMEngine, R: jax.Array, store: Any,
+                 wire_dtype: Any, stats: BSEStats):
+        self.engine = engine
+        self.R = R
+        self.store = store
+        self.wire_dtype = jnp.dtype(wire_dtype)
+        self.stats = stats
+        self._async = None      # AsyncIngestor once attached
+
+    def attach(self, runtime) -> None:
+        self._async = runtime
+
+    def _view(self):
+        """Committed snapshot to read from, or None for the live store."""
+        return None if self._async is None else self._async.committed
+
+    def _touch_misses(self, users: Sequence[Any], present) -> None:
+        if self._async is not None:
+            for u, p in zip(users, present):
+                if not p:
+                    self._async.submit_touch(u)
+
+    def fetch(self, user: Any) -> Optional[jax.Array]:
+        """CTR-server fetch: cast to the wire dtype and account exactly the
+        bytes of the array that crosses the wire. Unknown user -> ``None``
+        (counted in ``stats.n_misses``). A single fetch is a burst of one:
+        on a tiered store it promotes the user and touches the eviction
+        policy exactly like ``fetch_many`` (no silent cold-tier re-reads).
+        Async: a user not in the committed version reads as a miss and is
+        queued for promotion."""
+        view = self._view()
+        if view is not None:
+            row = view.row(user)
+            if row is None:
+                self.stats.n_misses += 1
+                self._async.submit_touch(user)
+                return None
+            table = row
+        else:
+            if user not in self.store:
+                self.stats.n_misses += 1
+                return None
+            table = self.store.rows(self.store.slots([user]))[0]
+        wire = table.astype(self.wire_dtype)
+        self.stats.n_fetches += 1
+        self.stats.bytes_transmitted += wire.size * self.wire_dtype.itemsize
+        return wire
+
+    def fetch_many(self, users: Sequence[Any]) -> jax.Array:
+        """Batched fetch: ONE gather -> (B, G, U, d) in the wire dtype.
+        A user the store does not hold gets an ALL-ZERO row and bumps
+        ``stats.n_misses`` — never a garbage slot gather, never an
+        exception (callers that need the user served ingest first). On a
+        tiered store, warm/cold users are batch-promoted and hit — with the
+        burst auto-chunked when it touches more distinct users than the hot
+        tier holds. Bytes are accounted for the array actually returned."""
+        view = self._view()
+        if view is not None:
+            slots, present = view.lookup(users)
+            rows = view.rows(slots)
+            self._touch_misses(users, present)
+        else:
+            cap = burst_cap(self.store)
+            if cap is not None:
+                chunks = burst_chunks(list(users), cap)
+                if len(chunks) > 1:
+                    return jnp.concatenate(
+                        [self.fetch_many(users[lo:hi]) for lo, hi in chunks])
+            slots, present = self.store.lookup(users)
+            rows = self.store.rows(slots)
+        misses = len(users) - int(present.sum())
+        if misses:
+            rows = rows * jnp.asarray(present, rows.dtype)[:, None, None, None]
+        wire = rows.astype(self.wire_dtype)
+        self.stats.n_fetches += len(users)
+        self.stats.n_misses += misses
+        self.stats.bytes_transmitted += wire.size * self.wire_dtype.itemsize
+        return wire
+
+    def serve_candidates(self, users: Sequence[Any], q: jax.Array,
+                         R: Optional[jax.Array] = None) -> jax.Array:
+        """Fused serving: score candidates ``q`` (B, C, d) for ``users`` in
+        ONE dispatch — the megakernel gathers each user's row straight out
+        of the table store (dequantizing in VMEM for int8/fp8 stores) and
+        returns interest vectors (B, C, d); the (B, G, U, d) table batch
+        that ``fetch_many`` materializes never exists. Unknown users get
+        zero interest (same miss contract as ``fetch_many``, including
+        burst auto-chunking on tiered stores and committed-version reads
+        under async ingestion). What crosses to the CTR server is the
+        (B, C, d) interest array in the wire dtype — C·d floats per user
+        instead of G·U·d."""
+        view = self._view()
+        if view is not None:
+            slots, present = view.lookup(users)
+            data, scales = view.data, view.scales
+            self._touch_misses(users, present)
+        else:
+            cap = burst_cap(self.store)
+            if cap is not None:
+                chunks = burst_chunks(list(users), cap)
+                if len(chunks) > 1:
+                    return jnp.concatenate(
+                        [self.serve_candidates(users[lo:hi], q[lo:hi], R=R)
+                         for lo, hi in chunks])
+            slots, present = self.store.lookup(users)
+            data, scales = self.store.data, self.store.scales
+        if self.store.sharded:
+            out = self.engine.serve_fused_sharded(
+                data, slots, q, present=present, scales=scales,
+                R=self.R if R is None else R, mesh=self.store.mesh_ctx)
+        else:
+            out = self.engine.serve_fused(
+                data, slots, q, present=present, scales=scales,
+                R=self.R if R is None else R)
+        wire = out.astype(self.wire_dtype)
+        self.stats.n_fetches += len(users)
+        self.stats.n_misses += len(users) - int(present.sum())
+        self.stats.bytes_transmitted += wire.size * self.wire_dtype.itemsize
+        return wire
+
+
 class BSEServer:
     def __init__(
         self,
@@ -113,6 +365,10 @@ class BSEServer:
         warm_capacity: Optional[int] = None,
         store: Any = None,
         table_dtype: Any = jnp.float32,
+        async_ingest: bool = False,
+        queue_depth: int = 1024,
+        max_staleness: int = 64,
+        drain_batch: int = 256,
     ):
         """``mesh`` (a Mesh or MeshCtx) shards the table store over the
         mesh's model axis (``ShardedTableStore``): capacity scales with the
@@ -131,9 +387,16 @@ class BSEServer:
         (``serve/quant.py``: fp32 | bf16 | int8 | fp8). Quantized stores
         keep per-row scales, quantize on write, and serve through either
         ``fetch_many`` (dequantized gather) or ``serve_candidates`` (the
-        fused megakernel dequantizes in VMEM)."""
-        self.embed_fn = embed_fn
-        self.params = params
+        fused megakernel dequantizes in VMEM).
+
+        ``async_ingest=True`` decouples the write path (paper §4.4's
+        latency-free claim): ``ingest_*`` calls enqueue onto a bounded
+        host-side queue (depth ``queue_depth``, non-blocking — drops are
+        counted, see ``serve/ingest.py``) drained by a writer loop in
+        batches of ≤ ``drain_batch``; reads serve the last committed
+        version and never block on a fold; a user's un-folded backlog is
+        bounded by ``max_staleness`` (the submitting thread folds inline
+        past it — backpressure lands on writers, never on readers)."""
         self.engine = engine
         self.R = engine.R if R is None else R
         self.wire_dtype = jnp.dtype(wire_dtype)
@@ -159,15 +422,49 @@ class BSEServer:
                                            dtype=table_dtype)
         self.tables = _TablesView(self.store)
         self.stats = BSEStats()
+        self.ingestor = BSEIngestor(embed_fn, params, engine, self.R,
+                                    self.store, self.stats)
+        self.fetcher = BSEFetcher(engine, self.R, self.store,
+                                  self.wire_dtype, self.stats)
+        self.async_ingest = None
+        if async_ingest:
+            from repro.serve.ingest import AsyncIngestor
+            self.async_ingest = AsyncIngestor(
+                self.ingestor, self.store, queue_depth=queue_depth,
+                max_staleness=max_staleness, drain_batch=drain_batch)
+            self.fetcher.attach(self.async_ingest)
+
+    # the params/embed snapshot lives on the write half; expose it here so
+    # existing callers (and refresh_params) keep one source of truth
+    @property
+    def params(self) -> Any:
+        return self.ingestor.params
+
+    @params.setter
+    def params(self, value: Any) -> None:
+        self.ingestor.params = value
+
+    @property
+    def embed_fn(self) -> Callable:
+        return self.ingestor.embed_fn
+
+    @embed_fn.setter
+    def embed_fn(self, value: Callable) -> None:
+        self.ingestor.embed_fn = value
 
     def refresh_params(self, params: Any) -> None:
         """Model push: new embeddings invalidate the whole store (re-encoded
-        lazily; the slot index is emptied so no stale slot can be read)."""
-        self.params = params
+        lazily; the slot index is emptied so no stale slot can be read).
+        Async: queued-but-unfolded behaviors are from the OLD model and are
+        dropped with the store; the runtime commits a fresh empty version."""
+        if self.async_ingest is not None:
+            self.async_ingest.refresh(params)
+            return
+        self.ingestor.params = params
         self.store.clear()
 
     # ------------------------------------------------------------------
-    # ingest
+    # ingest (async servers enqueue; sync servers fold inline)
     # ------------------------------------------------------------------
     def ingest_history(self, user: Any, items: np.ndarray, cats: np.ndarray,
                        mask: Optional[np.ndarray] = None) -> None:
@@ -178,20 +475,14 @@ class BSEServer:
 
     def ingest_histories(self, users: Sequence[Any], items: np.ndarray,
                          cats: np.ndarray,
-                         masks: Optional[np.ndarray] = None) -> None:
-        """Batched full (re-)encode: B distinct users' histories (B, L) in
-        ONE ``engine.encode`` dispatch, scattered into their slots."""
-        assert len(set(users)) == len(users), "duplicate users in one encode"
-        t0 = time.perf_counter()
-        seq_e = self.embed_fn(self.params, np.asarray(items), np.asarray(cats))
-        m = jnp.asarray(masks) if masks is not None else None
-        tables = self.engine.encode(seq_e, m, R=self.R)       # (B, G, U, d)
-        tables.block_until_ready()
-        self.stats.encode_time_s += time.perf_counter() - t0
-        self.stats.n_encodes += len(users)
-        # assign_fresh: every row is overwritten below, so a tiered store
-        # drops stale warm/cold copies instead of promoting them
-        self.store.write(self.store.assign_fresh(users), tables)
+                         masks: Optional[np.ndarray] = None):
+        """Batched full (re-)encode (see ``BSEIngestor.ingest_histories``).
+        On an async server this ENQUEUES (returns the accepted count;
+        rejects are counted drops) and the writer loop folds later."""
+        if self.async_ingest is not None:
+            return self.async_ingest.submit_histories(users, items, cats,
+                                                      masks)
+        return self.ingestor.ingest_histories(users, items, cats, masks)
 
     def ingest_event(self, user: Any, item: int, cat: int) -> None:
         """Real-time behavior event: incremental O(m·d) table update (the
@@ -200,109 +491,32 @@ class BSEServer:
 
     def ingest_events(self, users: Sequence[Any], items: np.ndarray,
                       cats: np.ndarray,
-                      mask: Optional[np.ndarray] = None) -> None:
-        """Batched real-time events: one event-block per user — items/cats
-        (B,) or (B, E) — folded into the store in ONE ``engine.update``
-        dispatch. Users may repeat (duplicate slots accumulate); unseen
-        users start from a zero table."""
-        items = np.asarray(items)
-        cats = np.asarray(cats)
-        mask = None if mask is None else np.asarray(mask)
-        if items.ndim == 1:
-            items, cats = items[:, None], cats[:, None]
-            mask = None if mask is None else mask[:, None]
-        if mask is not None:
-            assert mask.shape == items.shape, (mask.shape, items.shape)
-        ev_e = self.embed_fn(self.params, items, cats)        # (B, E, d)
-        m = None if mask is None else jnp.asarray(mask)
-        slots = self.store.assign(users)
-        if self.store.quantized:
-            # int8/fp8 payloads can't take an in-place scatter-add (the raw
-            # bytes are meaningless without their scales): encode the event
-            # deltas, fold duplicates, then read-modify-write the touched
-            # rows — one dequantizing gather + one requantizing scatter
-            deltas = self.engine.encode(ev_e, m, R=self.R)    # (B, G, U, d)
-            uniq, inv = np.unique(np.asarray(slots), axis=0,
-                                  return_inverse=True)
-            deltas = jax.ops.segment_sum(deltas, jnp.asarray(inv.ravel()),
-                                         num_segments=len(uniq))
-            self.store.write(uniq, self.store.rows(uniq) + deltas)
-        elif self.store.sharded:
-            self.store.data = self.engine.update_sharded(
-                self.store.data, slots, ev_e, m, R=self.R,
-                mesh=self.store.mesh_ctx, donate=True)
-        else:
-            self.store.data = self.engine.update(self.store.data, slots,
-                                                 ev_e, m, R=self.R,
-                                                 donate=True)
-        self.stats.n_updates += int(items.size if mask is None
-                                    else np.sum(np.asarray(mask) > 0))
+                      mask: Optional[np.ndarray] = None):
+        """Batched real-time events (see ``BSEIngestor.ingest_events``).
+        On an async server this ENQUEUES per-user event blocks (returns the
+        accepted count; rejects are counted drops)."""
+        if self.async_ingest is not None:
+            return self.async_ingest.submit_events(users, items, cats, mask)
+        return self.ingestor.ingest_events(users, items, cats, mask)
 
     def evict(self, user: Any) -> bool:
         """Drop a user's table; its slot is zeroed and recycled."""
+        if self.async_ingest is not None:
+            return self.async_ingest.evict(user)
         return self.store.evict(user)
 
     # ------------------------------------------------------------------
-    # fetch
+    # fetch (delegates to the read half)
     # ------------------------------------------------------------------
     def fetch(self, user: Any) -> Optional[jax.Array]:
-        """CTR-server fetch: cast to the wire dtype and account exactly the
-        bytes of the array that crosses the wire. Unknown user -> ``None``
-        (counted in ``stats.n_misses``). A single fetch is a burst of one:
-        on a tiered store it promotes the user and touches the eviction
-        policy exactly like ``fetch_many`` (no silent cold-tier re-reads)."""
-        if user not in self.store:
-            self.stats.n_misses += 1
-            return None
-        table = self.store.rows(self.store.slots([user]))[0]
-        wire = table.astype(self.wire_dtype)
-        self.stats.n_fetches += 1
-        self.stats.bytes_transmitted += wire.size * self.wire_dtype.itemsize
-        return wire
+        return self.fetcher.fetch(user)
 
     def fetch_many(self, users: Sequence[Any]) -> jax.Array:
-        """Batched fetch: ONE gather -> (B, G, U, d) in the wire dtype.
-        A user the store does not hold gets an ALL-ZERO row and bumps
-        ``stats.n_misses`` — never a garbage slot gather, never an
-        exception (callers that need the user served ingest first). On a
-        tiered store, warm/cold users are batch-promoted and hit. Bytes are
-        accounted for the array actually returned."""
-        slots, present = self.store.lookup(users)
-        rows = self.store.rows(slots)
-        misses = len(users) - int(present.sum())
-        if misses:
-            rows = rows * jnp.asarray(present, rows.dtype)[:, None, None, None]
-        wire = rows.astype(self.wire_dtype)
-        self.stats.n_fetches += len(users)
-        self.stats.n_misses += misses
-        self.stats.bytes_transmitted += wire.size * self.wire_dtype.itemsize
-        return wire
+        return self.fetcher.fetch_many(users)
 
     def serve_candidates(self, users: Sequence[Any], q: jax.Array,
                          R: Optional[jax.Array] = None) -> jax.Array:
-        """Fused serving: score candidates ``q`` (B, C, d) for ``users`` in
-        ONE dispatch — the megakernel gathers each user's row straight out
-        of the table store (dequantizing in VMEM for int8/fp8 stores) and
-        returns interest vectors (B, C, d); the (B, G, U, d) table batch
-        that ``fetch_many`` materializes never exists. Unknown users get
-        zero interest (same miss contract as ``fetch_many``). What crosses
-        to the CTR server is the (B, C, d) interest array in the wire dtype
-        — C·d floats per user instead of G·U·d."""
-        slots, present = self.store.lookup(users)
-        scales = self.store.scales
-        if self.store.sharded:
-            out = self.engine.serve_fused_sharded(
-                self.store.data, slots, q, present=present, scales=scales,
-                R=self.R if R is None else R, mesh=self.store.mesh_ctx)
-        else:
-            out = self.engine.serve_fused(
-                self.store.data, slots, q, present=present, scales=scales,
-                R=self.R if R is None else R)
-        wire = out.astype(self.wire_dtype)
-        self.stats.n_fetches += len(users)
-        self.stats.n_misses += len(users) - int(present.sum())
-        self.stats.bytes_transmitted += wire.size * self.wire_dtype.itemsize
-        return wire
+        return self.fetcher.serve_candidates(users, q, R=R)
 
     def table_bytes(self) -> int:
         """Per-user serving-state bytes. Quantized stores report the STORED
@@ -322,11 +536,14 @@ class BSEServer:
         """Persist the FULL serving state under ``dir``: every tier of the
         store (arrays + user indices + eviction recency + tier stats) plus
         the hash family ``R``, the wire dtype and the serving stats. A
-        server restored from it answers identically with no re-ingest."""
+        server restored from it answers identically with no re-ingest.
+        Async servers quiesce first (queue flushed, all folds committed)."""
         if not isinstance(self.store, TieredTableStore):
             raise TypeError(
                 "snapshot() needs the tiered store (pass hot_capacity=/"
                 "store_dir=/policy= when building the BSEServer)")
+        if self.async_ingest is not None:
+            self.async_ingest.flush()
         self.store.snapshot(dir)
         _atomic_npz(os.path.join(dir, "server.npz"), R=np.asarray(self.R))
         _atomic_json(os.path.join(dir, "server.json"),

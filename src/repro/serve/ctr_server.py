@@ -59,7 +59,9 @@ class CTRServer:
               wire_dtype: Any = jnp.bfloat16, hot_capacity: int = None,
               store_dir: str = None, policy: str = None,
               warm_capacity: int = None, table_dtype: Any = jnp.float32,
-              fused: bool = False) -> "CTRServer":
+              fused: bool = False, async_ingest: bool = False,
+              queue_depth: int = 1024,
+              max_staleness: int = 64) -> "CTRServer":
         """Mesh-aware construction of the whole serving pair: wires the
         model's behavior-embedding fn and checkpointed hash family ``R``
         into a ``BSEServer`` (decoupled mode), sharding its table store over
@@ -76,11 +78,21 @@ class CTRServer:
         micro-batches through ``BSEServer.serve_candidates`` — ONE fused
         gather+dequant+query dispatch instead of ``fetch_many`` + the
         model-side ``engine.query``; only the (B, C, e) interest crosses
-        between the servers."""
+        between the servers.
+
+        ``async_ingest=True`` runs BSE ingestion OFF the request path
+        (serve/ingest.py): missing users are enqueued, not encoded inline
+        — they score with zero long-term interest until the writer loop
+        folds and commits them (bounded by ``max_staleness``; queue drops
+        past ``queue_depth`` are counted). Reads never block on a fold."""
         from repro.serve.tiered_store import is_tiered
 
         bse = None
         tiered = is_tiered(hot_capacity, store_dir, policy, warm_capacity)
+        if mode != "decoupled" and async_ingest:
+            raise ValueError(
+                f"async ingestion feeds the BSE table store, which only the "
+                f"decoupled deployment has (mode={mode!r})")
         if mode != "decoupled" and mesh is not None:
             raise ValueError(
                 f"mesh shards the BSE table store, which only the decoupled "
@@ -102,7 +114,10 @@ class CTRServer:
                             mesh=mesh, hot_capacity=hot_capacity,
                             store_dir=store_dir, policy=policy,
                             warm_capacity=warm_capacity,
-                            table_dtype=table_dtype)
+                            table_dtype=table_dtype,
+                            async_ingest=async_ingest,
+                            queue_depth=queue_depth,
+                            max_staleness=max_staleness)
         return cls(model, params, bse, mode=mode, fused=fused)
 
     def __init__(self, model: CTRModel, params: Any,
@@ -148,6 +163,11 @@ class CTRServer:
                     np.asarray(user_batch["hist_mask"][0]),
                 )
                 table = self.bse.fetch(user)
+            if table is None:
+                # async ingestion: the encode was queued, not folded —
+                # serve zero long-term interest until the next commit
+                table = jnp.zeros(self.bse.store.row_shape,
+                                  self.bse.wire_dtype)
             self.stats.fetch_time_s += time.perf_counter() - tf0
             scores = self._score_table(self.params, user_batch, cand_items,
                                        cand_cats, ctx, table[None])
@@ -166,7 +186,12 @@ class CTRServer:
         exactly one (C_i,) score array per request.
 
         Decoupled mode pre-encodes all missing users in ONE batched
-        ``ingest_histories`` and reads all tables in ONE ``fetch_many``."""
+        ``ingest_histories`` and reads all tables in ONE ``fetch_many``
+        (on an async-ingest server the encode is enqueued instead — the
+        request never waits on the write path). An empty burst is a no-op:
+        ``[]`` in, ``[]`` out, nothing dispatched."""
+        if not requests:
+            return []
         t0 = time.perf_counter()
         users = [r[0] for r in requests]
         n_cands = [len(r[2]) for r in requests]

@@ -64,21 +64,49 @@ def qmax(dtype) -> float:
     return _QMAX[jnp.dtype(dtype)]
 
 
+def _quantize(rows: jax.Array, dtype) -> tuple[jax.Array, jax.Array,
+                                               jax.Array]:
+    """Shared body: (payload, scales, per-row finite mask).
+
+    A single non-finite element makes the row's max-abs ``amax`` inf/NaN,
+    which would emit ``scale=inf`` and dequantize to an all-NaN row that
+    poisons every later score. Such rows are SANITIZED instead: payload and
+    scale forced to zero (the row reads as an empty bucket table) and the
+    row flagged in the mask so callers can count it
+    (``TableStore.n_nonfinite``)."""
+    rows = rows.astype(jnp.float32)
+    q = qmax(dtype)
+    amax = jnp.max(jnp.abs(rows), axis=-1)
+    ok = jnp.isfinite(amax)                 # any inf/NaN in the row -> False
+    scales = jnp.where(ok, amax, 0.0) / q
+    inv = jnp.where(scales > 0, 1.0 / jnp.where(scales > 0, scales, 1.0), 0.0)
+    scaled = jnp.clip(jnp.where(ok[..., None], rows, 0.0) * inv[..., None],
+                      -q, q)
+    if jnp.issubdtype(jnp.dtype(dtype), jnp.integer):
+        scaled = jnp.round(scaled)
+    return scaled.astype(dtype), scales, ok
+
+
 @partial(jax.jit, static_argnames=("dtype",))
 def quantize_rows(rows: jax.Array, *, dtype) -> tuple[jax.Array, jax.Array]:
     """(…, d) fp rows -> ((…, d) quantized payload, (…,) fp32 scales).
 
     Symmetric max-abs scaling per trailing-d row; zero rows get scale 0 and
-    a zero payload (safe divide), so fresh slots stay exactly zero."""
-    rows = rows.astype(jnp.float32)
-    q = qmax(dtype)
-    amax = jnp.max(jnp.abs(rows), axis=-1)
-    scales = amax / q
-    inv = jnp.where(scales > 0, 1.0 / jnp.where(scales > 0, scales, 1.0), 0.0)
-    scaled = jnp.clip(rows * inv[..., None], -q, q)
-    if jnp.issubdtype(jnp.dtype(dtype), jnp.integer):
-        scaled = jnp.round(scaled)
-    return scaled.astype(dtype), scales
+    a zero payload (safe divide), so fresh slots stay exactly zero. Rows
+    containing inf/NaN are zeroed (payload AND scale) instead of emitting
+    ``scale=inf`` — use ``quantize_rows_checked`` to also count them."""
+    payload, scales, _ = _quantize(rows, dtype)
+    return payload, scales
+
+
+@partial(jax.jit, static_argnames=("dtype",))
+def quantize_rows_checked(rows: jax.Array, *, dtype
+                          ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """``quantize_rows`` + the count of non-finite rows that were zeroed —
+    what the table stores accumulate into ``n_nonfinite`` (alongside
+    ``n_saturated``) so a poisoned ingest is visible, never silent."""
+    payload, scales, ok = _quantize(rows, dtype)
+    return payload, scales, jnp.sum(~ok).astype(jnp.int32)
 
 
 @jax.jit

@@ -55,8 +55,9 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.distributed.mesh_ctx import MeshCtx
 from repro.distributed.sharding import table_store_spec
-from repro.serve.quant import (dequantize_rows, is_quantized, quantize_rows,
-                               resolve_table_dtype, saturate_cast, _range)
+from repro.serve.quant import (dequantize_rows, is_quantized,
+                               quantize_rows_checked, resolve_table_dtype,
+                               saturate_cast, _range)
 
 
 # the store drops its reference the moment the scatter returns, so the buffer
@@ -69,6 +70,20 @@ def _scatter_set(data, slots, rows):
 # quantized stores scatter payload + scales in ONE dispatch, both donated
 @functools.partial(jax.jit, donate_argnums=(0, 1))
 def _scatter_set2(data, scales, slots, rows, row_scales):
+    return data.at[slots].set(rows), scales.at[slots].set(row_scales)
+
+
+# non-donating twins for double-buffered readers (``donate_writes=False``):
+# the async ingest runtime publishes committed snapshots that keep a
+# reference to the PREVIOUS device array, so a write must copy instead of
+# aliasing — lock-free readers keep gathering from the old buffer
+@jax.jit
+def _scatter_set_copy(data, slots, rows):
+    return data.at[slots].set(rows)
+
+
+@jax.jit
+def _scatter_set2_copy(data, scales, slots, rows, row_scales):
     return data.at[slots].set(rows), scales.at[slots].set(row_scales)
 
 
@@ -98,6 +113,9 @@ class TableStore:
         self.n_grows = 0
         self.n_evictions = 0
         self.n_saturated = 0
+        self.n_nonfinite = 0
+        # False = copy-on-write scatters (async ingest double-buffering)
+        self.donate_writes = True
 
     def _note_saturation(self, n: int) -> None:
         if n and not self.n_saturated:
@@ -106,6 +124,13 @@ class TableStore:
                 f"storage dtype's range were saturated (see n_saturated)",
                 stacklevel=3)
         self.n_saturated += n
+
+    def _note_nonfinite(self, n: int) -> None:
+        if n and not self.n_nonfinite:
+            warnings.warn(
+                f"TableStore({self.dtype}): {n} row(s) containing inf/NaN "
+                "were zeroed on write (see n_nonfinite)", stacklevel=3)
+        self.n_nonfinite += n
 
     # ------------------------------------------------------------------
     # index
@@ -229,12 +254,17 @@ class TableStore:
     def write(self, slots: Sequence[int], rows: jax.Array) -> None:
         """One scatter: overwrite (B,) slots with rows (B, G, U, d).
         Quantized stores quantize-on-write (payload + per-row scales, still
-        one dispatch); narrow float targets take a saturating cast instead
-        of a silent ``astype`` wrap (counted in ``n_saturated``)."""
+        one dispatch) with non-finite rows zeroed and counted in
+        ``n_nonfinite`` (a single inf/NaN would otherwise poison the row
+        with ``scale=inf``); narrow float targets take a saturating cast
+        instead of a silent ``astype`` wrap (counted in ``n_saturated``)."""
         slots = jnp.asarray(slots, jnp.int32)
         if self.quantized:
-            payload, row_scales = quantize_rows(rows, dtype=self.dtype)
-            self.data, self.scales = _scatter_set2(
+            payload, row_scales, n_bad = quantize_rows_checked(
+                rows, dtype=self.dtype)
+            self._note_nonfinite(int(n_bad))
+            scatter2 = _scatter_set2 if self.donate_writes else _scatter_set2_copy
+            self.data, self.scales = scatter2(
                 self.data, self.scales, slots, payload, row_scales)
             return
         if self._check_range:
@@ -242,7 +272,8 @@ class TableStore:
             self._note_saturation(int(n))
         else:
             rows = rows.astype(self.dtype)
-        self.data = _scatter_set(self.data, slots, rows)
+        scatter = _scatter_set if self.donate_writes else _scatter_set_copy
+        self.data = scatter(self.data, slots, rows)
 
     # ------------------------------------------------------------------
     # raw-byte seam (tier demotion/promotion must be bit-exact)
@@ -262,12 +293,14 @@ class TableStore:
         assert payload.dtype == self.dtype, (payload.dtype, self.dtype)
         if self.quantized:
             assert scales is not None
-            self.data, self.scales = _scatter_set2(
+            scatter2 = _scatter_set2 if self.donate_writes else _scatter_set2_copy
+            self.data, self.scales = scatter2(
                 self.data, self.scales, slots, payload,
                 jnp.asarray(scales, jnp.float32))
         else:
             assert scales is None
-            self.data = _scatter_set(self.data, slots, payload)
+            scatter = _scatter_set if self.donate_writes else _scatter_set_copy
+            self.data = scatter(self.data, slots, payload)
 
     def row_nbytes(self) -> int:
         """Stored bytes per user row: payload + (quantized) its scales."""
@@ -365,9 +398,12 @@ def _sharded_ops(mesh, axis: str, rank: int = 3):
                          out_specs=rowspec, check_rep=False)(data)
 
     # grow's output is twice its input — donation could never alias, it
-    # would only emit "donated buffers were not usable" warnings
+    # would only emit "donated buffers were not usable" warnings. The
+    # non-donating scatter twin serves ``donate_writes=False`` stores whose
+    # previous buffer is still referenced by a committed reader snapshot.
     return (jax.jit(gather),
             jax.jit(scatter, donate_argnums=(0,)),
+            jax.jit(scatter),
             jax.jit(grow))
 
 
@@ -407,15 +443,16 @@ class ShardedTableStore:
             self.mesh_ctx.mesh, table_store_spec(self.axis))
         self.data = jax.device_put(
             jnp.zeros((S, per, *self.row_shape), self.dtype), self._sharding)
-        self._gather, self._scatter, self._grow_op = _sharded_ops(
-            self.mesh_ctx.mesh, self.axis)
+        (self._gather, self._scatter_donate, self._scatter_copy,
+         self._grow_op) = _sharded_ops(self.mesh_ctx.mesh, self.axis)
         if self.quantized:
             self._scale_sharding = NamedSharding(
                 self.mesh_ctx.mesh, P(self.axis, None, None, None))
             self.scales = jax.device_put(
                 jnp.zeros((S, per, n_groups, n_buckets), jnp.float32),
                 self._scale_sharding)
-            self._sgather, self._sscatter, self._sgrow_op = _sharded_ops(
+            (self._sgather, self._sscatter_donate, self._sscatter_copy,
+             self._sgrow_op) = _sharded_ops(
                 self.mesh_ctx.mesh, self.axis, rank=2)
         else:
             self.scales = None
@@ -425,8 +462,21 @@ class ShardedTableStore:
         self.n_grows = 0
         self.n_evictions = 0
         self.n_saturated = 0
+        self.n_nonfinite = 0
+        self.donate_writes = True
 
     _note_saturation = TableStore._note_saturation
+    _note_nonfinite = TableStore._note_nonfinite
+
+    @property
+    def _scatter(self):
+        return (self._scatter_donate if self.donate_writes
+                else self._scatter_copy)
+
+    @property
+    def _sscatter(self):
+        return (self._sscatter_donate if self.donate_writes
+                else self._sscatter_copy)
 
     # ------------------------------------------------------------------
     # index
@@ -563,7 +613,9 @@ class ShardedTableStore:
         (B, G, U, d) — quantize-on-write / saturating cast as TableStore."""
         slots = jnp.asarray(slots, jnp.int32)
         if self.quantized:
-            payload, row_scales = quantize_rows(rows, dtype=self.dtype)
+            payload, row_scales, n_bad = quantize_rows_checked(
+                rows, dtype=self.dtype)
+            self._note_nonfinite(int(n_bad))
             self.data = self._scatter(self.data, slots[:, 0], slots[:, 1],
                                       payload)
             self.scales = self._sscatter(self.scales, slots[:, 0],

@@ -234,6 +234,36 @@ POLICIES = {"lru": LRUPolicy, "clock": ClockPolicy}
 DEFAULT_HOT_CAPACITY = 64
 
 
+def burst_cap(store) -> Optional[int]:
+    """Max distinct users one batched op may touch, or None if unbounded —
+    the tiered store's hot-tier residency bound. Callers (``BSEServer``,
+    the async ingest writer) chunk oversized bursts with ``burst_chunks``
+    so the bound degrades to extra dispatches, never a request-path 500."""
+    return getattr(store, "hot_capacity", None)
+
+
+def burst_chunks(users: Sequence[Any], cap: int) -> list[tuple[int, int]]:
+    """Greedy split of a burst into index ranges ``[lo, hi)`` that each
+    touch at most ``cap`` DISTINCT users, preserving order. Duplicates
+    within a range share the distinct-user budget, so every range is safe
+    for ``_ensure_resident``; the single range ``[(0, len(users))]`` comes
+    back whenever the burst already fits."""
+    if cap < 1:
+        raise ValueError(f"burst chunk cap must be >= 1, got {cap}")
+    bounds: list[tuple[int, int]] = []
+    lo = 0
+    seen: set = set()
+    for i, u in enumerate(users):
+        if u not in seen:
+            if len(seen) == cap:
+                bounds.append((lo, i))
+                lo = i
+                seen = set()
+            seen.add(u)
+    bounds.append((lo, len(users)))
+    return bounds
+
+
 def is_tiered(hot_capacity=None, store_dir=None, policy=None,
               warm_capacity=None) -> bool:
     """The one predicate for "did the caller ask for the tiered store" —
@@ -519,7 +549,10 @@ class TieredTableStore:
                  mesh: Any = None, policy="clock",
                  store_dir: Optional[str] = None,
                  warm_capacity: Optional[int] = None):
-        assert hot_capacity >= 1
+        if hot_capacity < 1:
+            raise ValueError(
+                f"hot_capacity must be >= 1, got {hot_capacity} — a tiered "
+                "store needs at least one device-resident slot")
         if mesh is None:
             self.hot = TableStore(n_groups, n_buckets, d,
                                   capacity=hot_capacity, dtype=dtype)
@@ -562,6 +595,24 @@ class TieredTableStore:
     @property
     def quantized(self) -> bool:
         return self.hot.quantized
+
+    @property
+    def donate_writes(self) -> bool:
+        """Hot-tier write mode; the async ingest runtime flips it off so
+        committed reader snapshots survive in-place scatters."""
+        return self.hot.donate_writes
+
+    @donate_writes.setter
+    def donate_writes(self, value: bool) -> None:
+        self.hot.donate_writes = value
+
+    @property
+    def n_saturated(self) -> int:
+        return self.hot.n_saturated
+
+    @property
+    def n_nonfinite(self) -> int:
+        return self.hot.n_nonfinite
 
     @property
     def scales(self):

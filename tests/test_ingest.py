@@ -1,0 +1,396 @@
+"""Async streaming ingestion (serve/ingest.py, paper §4.4 "latency-free").
+
+The load-bearing properties:
+  * **fold equivalence** — fold(queued entries) ≡ synchronous ingestion
+    bit-for-bit once drained (the writer loop calls the same BSEIngestor
+    with the same batched arrays);
+  * **bounded staleness** — a user's un-folded backlog never exceeds
+    ``max_staleness`` (the submit path folds inline first);
+  * **honest backpressure** — a full queue drops and COUNTS, never blocks,
+    never loses an event silently;
+  * **committed-version isolation** — reads during an in-flight fold
+    return the previous committed version, unblocked (pinned by stalling
+    the fold's embed_fn on an Event while a reader proceeds).
+
+The crash repros from ISSUE 7 (oversized tiered bursts, empty request
+bursts, non-finite quantized ingest) ride along as regression tests.
+"""
+import os
+import threading
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import given, settings, st
+from repro.core.engine import EngineConfig, SDIMEngine
+from repro.serve.bse_server import BSEServer
+from repro.serve.ingest import AsyncIngestor, IngestStats
+from repro.serve.tiered_store import burst_chunks
+
+D = 16
+N_ITEMS, N_CATS = 64, 16
+_EMB_I = jax.random.normal(jax.random.PRNGKey(21), (N_ITEMS, D // 2))
+_EMB_C = jax.random.normal(jax.random.PRNGKey(22), (N_CATS, D // 2))
+
+
+def _embed(params, items, cats):
+    return jnp.concatenate([_EMB_I[jnp.asarray(items) % N_ITEMS],
+                            _EMB_C[jnp.asarray(cats) % N_CATS]], axis=-1)
+
+
+def _engine():
+    return SDIMEngine(EngineConfig(m=12, tau=2, d=D, backend="xla"))
+
+
+def _pair(eng=None, **kw):
+    """(sync server, async server) over identical engines/stores."""
+    eng = eng or _engine()
+    sync = BSEServer(_embed, None, eng, wire_dtype=jnp.float32, **kw)
+    asyn = BSEServer(_embed, None, eng, wire_dtype=jnp.float32,
+                     async_ingest=True, **kw)
+    return sync, asyn
+
+
+def _events(rng, n, n_users=6):
+    users = [f"u{int(rng.integers(n_users))}" for _ in range(n)]
+    items = rng.integers(0, N_ITEMS, n).astype(np.int32)
+    cats = rng.integers(0, N_CATS, n).astype(np.int32)
+    return users, items, cats
+
+
+# ---------------------------------------------------------------------------
+# fold equivalence
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("table_dtype", ["fp32", "int8"])
+def test_queued_events_fold_bit_exact(table_dtype):
+    """fold(queued events) == synchronous ingest_events, bit for bit."""
+    rng = np.random.default_rng(0)
+    sync, asyn = _pair(table_dtype=table_dtype)
+    users, items, cats = _events(rng, 24)
+    sync.ingest_events(users, items, cats)
+    assert asyn.ingest_events(users, items, cats) == 24
+    asyn.async_ingest.flush()
+    uniq = sorted(set(users))
+    np.testing.assert_array_equal(np.asarray(asyn.fetch_many(uniq)),
+                                  np.asarray(sync.fetch_many(uniq)))
+    st_ = asyn.async_ingest.stats
+    assert st_.n_events_folded == 24 and st_.n_dropped == 0
+    assert st_.queue_depth == 0
+
+
+def test_queued_histories_fold_bit_exact_and_dedupe():
+    rng = np.random.default_rng(1)
+    sync, asyn = _pair()
+    users = [f"h{i}" for i in range(5)]
+    L = 8
+    items = rng.integers(0, N_ITEMS, (5, L)).astype(np.int32)
+    cats = rng.integers(0, N_CATS, (5, L)).astype(np.int32)
+    masks = (rng.random((5, L)) > 0.3).astype(np.float32)
+    sync.ingest_histories(users, items, cats, masks)
+    assert asyn.ingest_histories(users, items, cats, masks) == 5
+    # a queued history subsumes a resubmit of the same user
+    assert asyn.ingest_histories(users, items, cats, masks) == 5
+    assert asyn.async_ingest.stats.n_deduped == 5
+    asyn.async_ingest.flush()
+    np.testing.assert_array_equal(np.asarray(asyn.fetch_many(users)),
+                                  np.asarray(sync.fetch_many(users)))
+    assert asyn.async_ingest.stats.n_histories_folded == 5
+
+
+def test_interleaved_kinds_fold_in_queue_order():
+    """history → events → history for one user folds exactly like the same
+    synchronous sequence (order across segment boundaries preserved)."""
+    rng = np.random.default_rng(2)
+    sync, asyn = _pair()
+    L = 6
+    hist = (rng.integers(0, N_ITEMS, (1, L)).astype(np.int32),
+            rng.integers(0, N_CATS, (1, L)).astype(np.int32))
+    ev = (rng.integers(0, N_ITEMS, 4).astype(np.int32),
+          rng.integers(0, N_CATS, 4).astype(np.int32))
+    hist2 = (rng.integers(0, N_ITEMS, (1, L)).astype(np.int32),
+             rng.integers(0, N_CATS, (1, L)).astype(np.int32))
+    for srv in (sync, asyn):
+        srv.ingest_histories(["x"], *hist)
+        srv.ingest_events(["x"] * 4, *ev)
+        srv.ingest_histories(["x"], *hist2)        # wholesale overwrite wins
+        srv.ingest_events(["x"] * 4, *ev)
+    asyn.async_ingest.flush()
+    np.testing.assert_array_equal(np.asarray(asyn.fetch_many(["x"])),
+                                  np.asarray(sync.fetch_many(["x"])))
+
+
+@pytest.mark.slow
+@given(n_events=st.integers(1, 30), n_users=st.integers(1, 6),
+       drain_batch=st.integers(1, 8), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_fold_equivalence_property(n_events, n_users, drain_batch, seed):
+    """Any event stream, any drain granularity: drained state == sync."""
+    rng = np.random.default_rng(seed)
+    eng = _engine()
+    sync = BSEServer(_embed, None, eng, wire_dtype=jnp.float32)
+    asyn = BSEServer(_embed, None, eng, wire_dtype=jnp.float32,
+                     async_ingest=True, drain_batch=drain_batch)
+    users, items, cats = _events(rng, n_events, n_users)
+    sync.ingest_events(users, items, cats)
+    asyn.ingest_events(users, items, cats)
+    asyn.async_ingest.flush()
+    uniq = sorted(set(users))
+    np.testing.assert_allclose(np.asarray(asyn.fetch_many(uniq)),
+                               np.asarray(sync.fetch_many(uniq)),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# staleness bound + backpressure
+# ---------------------------------------------------------------------------
+def test_staleness_never_exceeds_bound():
+    _, asyn = _pair()
+    rt = AsyncIngestor(asyn.ingestor, asyn.store, queue_depth=256,
+                       max_staleness=3, drain_batch=2)
+    for k in range(20):
+        rt.submit_event("u", k % N_ITEMS, k % N_CATS)
+        assert rt.staleness("u") <= 3
+    assert rt.stats.n_forced_drains > 0          # the bound actually bit
+    assert rt.stats.staleness_max() <= 3
+    rt.flush()
+    assert rt.staleness("u") == 0
+
+
+def test_backpressure_drops_are_counted_never_silent():
+    _, asyn = _pair()
+    rt = AsyncIngestor(asyn.ingestor, asyn.store, queue_depth=4,
+                       max_staleness=100, drain_batch=4)
+    results = [rt.submit_event(f"u{i}", i % N_ITEMS, i % N_CATS)
+               for i in range(10)]
+    assert results.count(True) == 4 and results.count(False) == 6
+    assert rt.stats.n_dropped == 6 and rt.stats.n_enqueued == 4
+    rt.flush()
+    # every ACCEPTED event is folded; the drop count explains the rest
+    assert rt.stats.n_events_folded == 4
+    assert rt.stats.n_events_folded + rt.stats.n_dropped == 10
+
+
+def test_runtime_rejects_misconfiguration():
+    _, asyn = _pair()
+    for kw in ({"queue_depth": 0}, {"max_staleness": 0}, {"drain_batch": 0}):
+        with pytest.raises(ValueError):
+            AsyncIngestor(asyn.ingestor, asyn.store, **kw)
+
+
+# ---------------------------------------------------------------------------
+# committed-version isolation
+# ---------------------------------------------------------------------------
+def test_reads_serve_previous_version_during_inflight_fold():
+    """A fold stalled mid-flight (embed blocked on an Event) must not be
+    visible: concurrent reads return the last committed version without
+    blocking; the new version appears only after the fold commits."""
+    eng = _engine()
+    gate = threading.Event()
+    stall = threading.Event()
+
+    def slow_embed(params, items, cats):
+        if stall.is_set():
+            assert gate.wait(30), "fold gate never opened"
+        return _embed(params, items, cats)
+
+    asyn = BSEServer(slow_embed, None, eng, wire_dtype=jnp.float32,
+                     async_ingest=True)
+    rt = asyn.async_ingest
+    asyn.ingest_events(["a"], np.array([3]), np.array([1]))
+    rt.flush()
+    v0 = rt.committed.version
+    before = np.asarray(asyn.fetch_many(["a"]))
+
+    stall.set()
+    asyn.ingest_events(["a"], np.array([9]), np.array([2]))
+    t = threading.Thread(target=rt.drain_once)
+    t.start()
+    try:
+        # the fold is now blocked inside embed; reads must neither block
+        # nor observe the half-applied update
+        assert rt.committed.version == v0
+        during = np.asarray(asyn.fetch_many(["a"]))
+        np.testing.assert_array_equal(during, before)
+    finally:
+        gate.set()
+        t.join(30)
+    assert not t.is_alive()
+    stall.clear()
+    assert rt.committed.version == v0 + 1
+    after = np.asarray(asyn.fetch_many(["a"]))
+    assert not np.array_equal(after, before)     # the fold really landed
+    # and it landed on the same state a sync server reaches
+    sync = BSEServer(_embed, None, eng, wire_dtype=jnp.float32)
+    sync.ingest_events(["a", "a"], np.array([3, 9]), np.array([1, 2]))
+    np.testing.assert_array_equal(after, np.asarray(sync.fetch_many(["a"])))
+
+
+def test_uncommitted_users_read_as_zero_row_misses():
+    _, asyn = _pair()
+    asyn.ingest_events(["z"], np.array([5]), np.array([2]))
+    out = np.asarray(asyn.fetch_many(["z"]))
+    np.testing.assert_array_equal(out, np.zeros_like(out))
+    assert asyn.stats.n_misses == 1
+    assert asyn.fetch("z") is None
+    asyn.async_ingest.flush()
+    assert asyn.fetch("z") is not None
+
+
+def test_refresh_params_drops_queue_and_commits_empty():
+    _, asyn = _pair()
+    asyn.ingest_events(["q"], np.array([1]), np.array([1]))
+    asyn.async_ingest.flush()
+    asyn.ingest_events(["q"], np.array([2]), np.array([2]))   # stays queued
+    asyn.refresh_params(None)
+    assert asyn.async_ingest.stats.queue_depth == 0
+    assert asyn.fetch("q") is None                 # store + queue both gone
+    asyn.async_ingest.flush()
+    assert asyn.fetch("q") is None                 # queued entry was dropped
+
+
+def test_writer_thread_drains_and_stops_clean():
+    sync, asyn = _pair()
+    rt = asyn.async_ingest
+    rt.start()
+    rt.start()                                     # idempotent
+    rng = np.random.default_rng(7)
+    users, items, cats = _events(rng, 40)
+    sync.ingest_events(users, items, cats)
+    asyn.ingest_events(users, items, cats)
+    rt.stop(flush=True)                            # join + drain remainder
+    uniq = sorted(set(users))
+    np.testing.assert_array_equal(np.asarray(asyn.fetch_many(uniq)),
+                                  np.asarray(sync.fetch_many(uniq)))
+    assert rt.stats.queue_depth == 0
+
+
+# ---------------------------------------------------------------------------
+# tiered composition: touches promote off the request path
+# ---------------------------------------------------------------------------
+def test_tiered_async_miss_touches_promote_on_next_drain(tmp_path):
+    sync, _ = _pair()
+    asyn = BSEServer(_embed, None, _engine(), wire_dtype=jnp.float32,
+                     async_ingest=True, hot_capacity=2, warm_capacity=4,
+                     store_dir=os.path.join(str(tmp_path), "cold"))
+    users = [f"t{i}" for i in range(4)]
+    ev = (np.arange(4).astype(np.int32), (np.arange(4) % N_CATS).astype(np.int32))
+    sync.ingest_events(users, *ev)
+    asyn.ingest_events(users, *ev)
+    asyn.async_ingest.flush()
+    ref = np.asarray(sync.fetch_many(users))
+    got = np.asarray(asyn.fetch_many(users))       # ≤2 hot, rest miss+touch
+    for i in range(4):
+        assert (np.all(got[i] == 0)
+                or np.array_equal(got[i], ref[i])), i
+    missed = [u for i, u in enumerate(users) if np.all(got[i] == 0)]
+    assert missed                                   # hot tier can't hold all
+    asyn.async_ingest.flush()                       # folds the touches
+    got2 = np.asarray(asyn.fetch_many(missed[:2]))
+    ref2 = np.asarray(sync.fetch_many(missed[:2]))
+    np.testing.assert_array_equal(got2, ref2)
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 7 crash regressions
+# ---------------------------------------------------------------------------
+def test_burst_chunks_cover_and_bound():
+    users = [0, 1, 0, 2, 3, 3, 4, 5, 1, 6]
+    for cap in (1, 2, 3, 10):
+        chunks = burst_chunks(users, cap)
+        assert chunks[0][0] == 0 and chunks[-1][1] == len(users)
+        for (_, a), (b, _) in zip(chunks, chunks[1:]):
+            assert a == b                          # contiguous cover
+        for lo, hi in chunks:
+            assert len(set(users[lo:hi])) <= cap
+    assert burst_chunks(users, 10) == [(0, len(users))]
+    with pytest.raises(ValueError):
+        burst_chunks(users, 0)
+
+
+def test_tiered_burst_wider_than_hot_capacity_chunks(tmp_path):
+    """ISSUE 7 repro: hot_capacity=4, burst of 8 distinct users through
+    CTRServer.handle_requests used to raise ValueError out of
+    TieredTableStore._ensure_resident. Now it serves, chunked."""
+    from repro.core.interest import InterestConfig
+    from repro.data.synthetic import SyntheticCTRConfig, generate_batch
+    from repro.models.ctr import CTRModel, CTRConfig
+    from repro.serve.ctr_server import CTRServer
+
+    L = 32
+    cfg = CTRConfig(arch="din", n_items=200, n_cats=20, long_len=L,
+                    short_len=8, mlp_hidden=(16,), embed_dim=8,
+                    interest=InterestConfig(kind="sdim", m=12, tau=2))
+    model = CTRModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tiered = CTRServer.build(model, params, "decoupled", hot_capacity=4,
+                             store_dir=os.path.join(str(tmp_path), "cold"),
+                             wire_dtype=jnp.float32)
+    plain = CTRServer.build(model, params, "decoupled",
+                            wire_dtype=jnp.float32)
+    rng = np.random.default_rng(0)
+    dcfg = SyntheticCTRConfig(hist_len=L, n_items=200, n_cats=20)
+    reqs = []
+    for u in range(8):
+        r = generate_batch(dcfg, 1, u)
+        ub = {k: jnp.asarray(v) for k, v in r.items() if k.startswith("hist")}
+        reqs.append((u, ub,
+                     jnp.asarray(rng.integers(0, 200, 5).astype(np.int32)),
+                     jnp.asarray(rng.integers(0, 20, 5).astype(np.int32)),
+                     jnp.zeros((5, 4))))
+    a = tiered.handle_requests(reqs)               # burst of 8 > hot 4
+    b = plain.handle_requests(reqs)
+    for x, y in zip(a, b):
+        np.testing.assert_allclose(x, y, rtol=1e-5, atol=1e-5)
+    assert len(tiered.bse.store.hot) <= 4
+
+
+def test_nonfinite_ingest_cannot_poison_later_fetches():
+    """ISSUE 7 repro: one inf/NaN row used to quantize to scale=inf and
+    dequantize to all-NaN. It must read back zero, counted, and leave
+    healthy rows untouched."""
+    srv = BSEServer(_embed, None, _engine(), wire_dtype=jnp.float32,
+                    table_dtype="int8")
+    srv.ingest_events(["good"], np.array([3]), np.array([1]))
+    good_before = np.asarray(srv.fetch_many(["good"]))
+    shape = (1, *srv.store.row_shape)
+    poisoned = jnp.full(shape, jnp.inf).at[0, 0, 0, 0].set(jnp.nan)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        srv.store.write(srv.store.assign(["bad"]), poisoned)
+    assert srv.store.n_nonfinite > 0
+    out = np.asarray(srv.fetch_many(["bad", "good"]))
+    assert np.all(np.isfinite(out))
+    np.testing.assert_array_equal(out[0], np.zeros_like(out[0]))
+    np.testing.assert_array_equal(out[1], good_before[0])
+
+
+def test_quantize_rows_sanitizes_nonfinite_rows():
+    from repro.serve.quant import (dequantize_rows, quantize_rows,
+                                   quantize_rows_checked)
+
+    rows = np.ones((4, 8), np.float32)
+    rows[1, 3] = np.inf
+    rows[2, 0] = np.nan
+    payload, scales = quantize_rows(jnp.asarray(rows), dtype=jnp.int8)
+    assert np.all(np.isfinite(np.asarray(scales)))
+    back = np.asarray(dequantize_rows(payload, scales))
+    assert np.all(np.isfinite(back))
+    np.testing.assert_array_equal(back[1], 0)
+    np.testing.assert_array_equal(back[2], 0)
+    np.testing.assert_allclose(back[0], rows[0], atol=1 / 127)
+    _, _, n_bad = quantize_rows_checked(jnp.asarray(rows), dtype=jnp.int8)
+    assert int(n_bad) == 2
+
+
+def test_ingest_stats_as_dict_shape():
+    s = IngestStats()
+    s.note_staleness(2)
+    s.note_staleness(4)
+    d = s.as_dict()
+    assert "staleness_samples" not in d
+    assert d["staleness_max"] == 4 and d["staleness_p95"] > 0
+    assert {"n_enqueued", "n_dropped", "queue_depth",
+            "max_drain_batch", "fold_time_s"} <= set(d)

@@ -155,6 +155,36 @@ def test_saturating_cast_clips_and_warns_once():
     assert float(np.asarray(store.rows(h)).min()) == -65504.0
 
 
+def test_nonfinite_rows_sanitize_and_warn_once():
+    """ISSUE 7 repro: a row with inf/NaN quantized to scale=inf, so EVERY
+    later dequantized fetch of that row was all-NaN. Now the row is zeroed
+    on write, ``n_nonfinite`` counts it, the FIRST one warns (later ones
+    only count), and neighbouring healthy rows are untouched."""
+    rng = np.random.default_rng(5)
+    store = TableStore(1, 2, 8, capacity=4, dtype="int8")
+    good = _rows(rng, b=1, g=1, u=2, d=8)
+    store.write(store.assign(["good"]), jnp.asarray(good))
+    bad = np.ones((1, 1, 2, 8), np.float32)
+    bad[0, 0, 0, 3] = np.inf
+    bad[0, 0, 1, 5] = np.nan
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        store.write(store.assign(["bad"]), jnp.asarray(bad))
+        assert any("inf/NaN" in str(x.message) for x in w)
+    assert store.n_nonfinite == 2                     # per poisoned row
+    with warnings.catch_warnings(record=True) as w:   # counted, not re-warned
+        warnings.simplefilter("always")
+        store.write(store.lookup(["bad"])[0], jnp.asarray(bad))
+    assert not w and store.n_nonfinite == 4
+    slots = store.lookup(["bad", "good"])[0]
+    out = np.asarray(store.rows(slots))
+    assert np.isfinite(out).all()
+    np.testing.assert_array_equal(out[0], 0.0)
+    bound = np.asarray(store.scales)[slots][..., None] * 0.5 + 1e-6
+    assert (np.abs(out[1] - good[0]) <= bound[1]).all()
+    assert np.isfinite(np.asarray(store.scales)).all()
+
+
 # ---------------------------------------------------------------------------
 # bit-exact tier movement + snapshot
 # ---------------------------------------------------------------------------

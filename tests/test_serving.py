@@ -124,6 +124,21 @@ def test_micro_batched_requests_match_per_request():
     assert len(bse.tables) == 4           # burst bootstrap encoded every user
 
 
+def test_empty_burst_is_a_noop_in_every_mode():
+    """ISSUE 7 repro: ``handle_requests([])`` raised ``ValueError: max()
+    arg is an empty sequence``. An empty burst must return ``[]`` without
+    dispatching anything, in all three deployments."""
+    model, params, user, raw, embed, R = _setup(L=64)
+    bse = BSEServer(embed, params, model.engine, R=R, wire_dtype=jnp.float32)
+    servers = [CTRServer(model, params, bse, mode="decoupled"),
+               CTRServer(model, params, mode="inline"),
+               CTRServer(model, params, mode="target_attention")]
+    for server in servers:
+        assert server.handle_requests([]) == []
+        assert server.stats.n_requests == 0
+        assert server.stats.total_time_s == 0.0
+
+
 def test_model_push_invalidates_tables():
     model, params, user, raw, embed, R = _setup()
     bse = BSEServer(embed, params, model.engine, R=R)

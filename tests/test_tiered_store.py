@@ -476,17 +476,26 @@ def test_build_mesh_flag_validation():
     assert msgs and "--mesh" in msgs[0]
 
 
-def test_launcher_rejects_micro_batch_wider_than_hot_tier():
-    """A burst can touch at most hot-capacity distinct users; the launcher
-    must fail at flag-parse time, not mid-serving — including when tiering
-    is enabled implicitly (no explicit --hot-capacity)."""
+@pytest.mark.slow
+def test_launcher_serves_micro_batch_wider_than_hot_tier(tmp_path):
+    """A burst wider than the hot tier used to be rejected at flag-parse
+    time; BSEServer now auto-chunks oversized bursts into hot-capacity-
+    sized sub-bursts, so the launcher must ACCEPT and serve it."""
     import subprocess as sp
 
-    for flags in (["--hot-capacity", "4", "--micro-batch", "8"],
-                  ["--store-dir", "/tmp/x-cold", "--micro-batch", "128"]):
-        r = sp.run([sys.executable, "-m", "repro.launch.serve",
-                    "--arch", "sdim-paper"] + flags,
-                   capture_output=True, text=True, timeout=300,
-                   env={**os.environ, "PYTHONPATH": SRC})
-        assert r.returncode == 2, (flags, r.stderr[-500:])
-        assert "hot-tier capacity" in r.stderr, r.stderr[-500:]
+    r = sp.run([sys.executable, "-m", "repro.launch.serve",
+                "--arch", "sdim-paper", "--requests", "8",
+                "--candidates", "8", "--hot-capacity", "4",
+                "--micro-batch", "8",
+                "--store-dir", os.path.join(str(tmp_path), "cold")],
+               capture_output=True, text=True, timeout=600,
+               env={**os.environ, "PYTHONPATH": SRC})
+    assert r.returncode == 0, r.stderr[-1000:]
+    assert "ms/request" in r.stdout, r.stdout[-500:]
+    # a rejected --hot-capacity misconfiguration still fails at parse time
+    r = sp.run([sys.executable, "-m", "repro.launch.serve",
+                "--arch", "sdim-paper", "--hot-capacity", "0"],
+               capture_output=True, text=True, timeout=300,
+               env={**os.environ, "PYTHONPATH": SRC})
+    assert r.returncode == 2, r.stderr[-500:]
+    assert "--hot-capacity" in r.stderr, r.stderr[-500:]

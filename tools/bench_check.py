@@ -4,8 +4,11 @@
 Fails (exit 1) when the file is missing, unparseable, or structurally
 malformed: every serving variant must report finite positive users/sec and
 ordered latency percentiles, the quantization block must carry the
-bytes-ratio and AUC-parity measurements, and tier hit-rates must be
-probabilities. Thresholds (1.5x speedup, 3.5x bytes, 1e-3 AUC gap) are
+bytes-ratio and AUC-parity measurements, tier hit-rates must be
+probabilities, and the ingest block must report both latency phases with
+an accounted event balance (folded + dropped covers submitted — no event
+goes silently missing). Thresholds (1.5x speedup, 3.5x bytes, 1e-3 AUC
+gap, 1.2x under-ingest p95) are
 PR-acceptance numbers measured on dedicated hardware — this check pins the
 *schema* so a silently-skipped section can't pass CI, without making CI
 flaky on loaded machines.
@@ -95,6 +98,37 @@ def check(bench: dict) -> list[str]:
         _num(hr, bk, lo=0.0, hi=1.0, where="hit_rate")
     lines.append("hit_rate: " + ", ".join(f"{k}={v:.2f}"
                                           for k, v in sorted(hr.items())))
+
+    ing = bench.get("ingest")
+    if not isinstance(ing, dict) or not ing:
+        raise Malformed("ingest: expected non-empty dict")
+    where = "ingest"
+    _num(ing, "n_users", lo=1, where=where)
+    _num(ing, "n_bursts", lo=1, where=where)
+    for phase in ("read_only", "under_ingest"):
+        blk = ing.get(phase)
+        if not isinstance(blk, dict):
+            raise Malformed(f"{where}.{phase}: missing latency block")
+        p50 = _num(blk, "p50_ms", lo=0, where=f"{where}.{phase}")
+        p95 = _num(blk, "p95_ms", lo=0, where=f"{where}.{phase}")
+        if p50 > p95:
+            raise Malformed(
+                f"{where}.{phase}: p50={p50} above p95={p95}")
+    ratio = _num(ing, "p95_ratio", lo=1e-9, where=where)
+    eps = _num(ing, "events_per_sec", lo=1e-9, where=where)
+    _num(ing, "events_submitted", lo=0, where=where)
+    folded = _num(ing, "events_folded", lo=0, where=where)
+    dropped = _num(ing, "n_dropped", lo=0, where=where)
+    if folded + dropped < _num(ing, "events_submitted", lo=0, where=where):
+        raise Malformed(
+            f"{where}: folded({folded}) + dropped({dropped}) below "
+            f"submitted({ing['events_submitted']}) — events went missing")
+    _num(ing, "staleness_p95", lo=0, where=where)
+    _num(ing, "max_queue_depth", lo=0, where=where)
+    lines.append(f"ingest: under-ingest p95 {ratio:.2f}x read-only "
+                 f"({eps:.0f} events/s folded, "
+                 f"{int(dropped)} dropped, "
+                 f"staleness p95 {ing['staleness_p95']})")
     return lines
 
 
