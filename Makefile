@@ -9,17 +9,26 @@
 # `test-fast` skips the slow property/parity suites (no hypothesis
 # needed); `test-full` runs everything, including the hypothesis property
 # tests and interpret-mode kernel parity (hypothesis optional — see
-# requirements-dev). `docs-check` verifies intra-repo doc links + kernel
-# docstrings; it rides in the default test-fast / ci paths.
+# requirements-dev). `test-faults` is the fault-injection harness for the
+# production serving runtime (tests/test_runtime_faults.py: circuit
+# breaker, admission shed, metrics monotonicity — deterministic, seeded,
+# virtual-clocked, no wall sleeps); it gates `test-fast` so a broken
+# degrade/shed path fails before the full suite runs. `docs-check`
+# verifies intra-repo doc links + kernel docstrings; it rides in the
+# default test-fast / ci paths.
 PYTHONPATH := src
 
-.PHONY: test test-fast test-full bench-smoke bench-check docs-check ci
+.PHONY: test test-fast test-faults test-full bench-smoke bench-check docs-check ci
 
 test:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
 
-test-fast: docs-check
+test-fast: docs-check test-faults
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q -m "not slow"
+
+test-faults:
+	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q -m "not slow" \
+		tests/test_runtime_faults.py
 
 test-full:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -q

@@ -50,6 +50,17 @@ The **capacity-pressure** section measures the tiered store
 bytes and users/sec vs the unbounded store, on both backends. Promote and
 demote are batched per burst (the gather/scatter counters in the derived
 column stay O(#bursts), never O(users)).
+
+The **slo** section (schema 2) runs the full production request path —
+``CTRServer.handle_requests`` behind admission control (token-bucket rate
+limit + concurrency bound), a tiered store spilling past the hot tier, and
+the cold-tier circuit breaker armed — under an open-loop Zipf+Poisson
+overload that deliberately offers more than the bucket admits. It writes
+p50/p95/p99 tail latency plus the shed and degrade rates into
+``bench['slo']`` (validated by ``tools/bench_check.py``; ``make ci`` fails
+if the section is missing), pinning the §4.4 latency-guarantee story:
+under overload the server sheds explicitly and degrades cold reads to
+counted misses — it never stalls and never drops silently.
 """
 from __future__ import annotations
 
@@ -70,11 +81,11 @@ from repro.serve.ctr_server import CTRServer
 
 
 def run(quick: bool = True):
-    bench = {"schema": 1, "quick": bool(quick),
+    bench = {"schema": 2, "quick": bool(quick),
              "generated_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ",
                                             time.gmtime()),
              "backends": {}, "quantization": {}, "roofline": {},
-             "hit_rate": {}, "ingest": {}}
+             "hit_rate": {}, "ingest": {}, "slo": {}}
     T = 2000
     B = 256 if quick else 1024
     n_req = 5 if quick else 20
@@ -128,6 +139,7 @@ def run(quick: bool = True):
     rows.extend(sharded_rows(quick))
     rows.extend(ingest_rows(quick, bench))
     rows.extend(pressure_rows(quick, bench))
+    rows.extend(slo_rows(quick, bench))
     _write_bench_json(bench)
     return rows
 
@@ -757,3 +769,129 @@ def pressure_rows(quick: bool = True, bench: dict = None) -> list[dict]:
                        f"{ts.n_hot_gathers}_hot_scatters={ts.n_hot_scatters}"
                        f"_bursts={n_bursts}"})
     return rows
+
+
+def slo_rows(quick: bool = True, bench: dict = None) -> list[dict]:
+    """Tail latency under overload through the FULL production request path:
+    ``CTRServer.handle_requests`` with admission control (token-bucket rate
+    limit + concurrency bound), a tiered store whose working set spills past
+    the hot tier, and the cold-tier circuit breaker armed. The workload is
+    OPEN-LOOP — Zipf(1.1) user popularity, Poisson request arrivals per
+    burst, exponential think gaps — and deliberately offers more traffic
+    than the token bucket admits, so the shed path (explicit ``None``
+    scores, every one counted) is exercised at its real rate rather than
+    never. Reports per-burst p50/p95/p99 over admitted bursts plus the shed
+    and degrade rates into ``bench['slo']`` (schema 2 — ``tools/bench_check``
+    fails ``make ci`` when the section is missing or its percentiles are
+    unordered). Conservation is asserted inline: offered == served + shed,
+    same invariant the fault harness (tests/test_runtime_faults.py) pins
+    under injected faults."""
+    from repro.serve.tiered_store import TierStats
+
+    dcfg = SyntheticCTRConfig(hist_len=32, n_items=200, n_cats=20)
+    cfg = CTRConfig(arch="din", n_items=200, n_cats=20, long_len=32,
+                    short_len=8, mlp_hidden=(16,),
+                    interest=InterestConfig(kind="sdim", m=8, tau=2,
+                                            backend="xla"))
+    model = CTRModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    N = 96                        # working set (users)
+    H = 32                        # device-hot capacity (rest spills cold)
+    C = 8                         # requests per arriving burst (Poisson mean)
+    CAND = 16                     # candidates per request
+    n_bursts = 60 if quick else 200
+    rate_limit = 200.0            # admitted requests/sec
+    rate_burst = 16.0
+    gap_s = 0.02                  # mean think gap -> ~C/gap offered rps
+    tmp = tempfile.mkdtemp(prefix="bse-slo-")
+    try:
+        server = CTRServer.build(
+            model, params, "decoupled", wire_dtype=jnp.float32,
+            hot_capacity=H, warm_capacity=0, store_dir=tmp,
+            cold_deadline_s=0.05, rate_limit=rate_limit,
+            rate_burst=rate_burst, max_concurrency=4)
+        rng = np.random.default_rng(0)
+        raw = generate_batch(dcfg, 1, 0)
+        ub = {k: jnp.asarray(v) for k, v in raw.items()
+              if k.startswith("hist")}
+        hist_i = rng.integers(0, 200, (N, 32))
+        hist_c = rng.integers(0, 20, (N, 32))
+        for lo in range(0, N, H):                       # bootstrap all tiers
+            server.bse.ingest_histories(list(range(lo, lo + H)),
+                                        hist_i[lo:lo + H], hist_c[lo:lo + H])
+        p = 1.0 / (np.arange(1, N + 1) ** 1.1)          # Zipf(1.1) popularity
+        p /= p.sum()
+        sizes = np.maximum(rng.poisson(C, n_bursts), 1)  # Poisson arrivals
+        gaps = rng.exponential(gap_s, n_bursts)
+
+        def burst(k):
+            us = rng.choice(N, size=k, p=p)
+            return [(int(u), ub,
+                     jnp.asarray(rng.integers(0, 200, CAND).astype(np.int32)),
+                     jnp.asarray(rng.integers(0, 20, CAND).astype(np.int32)),
+                     jnp.zeros((CAND, 4))) for u in us]
+
+        # warm one burst per Poisson size (each request-count pads/compiles
+        # its own scorer shape) with admission off, so no warm burst sheds
+        # and the timed loop measures serving, not compilation
+        adm, server.admission = server.admission, None
+        for k in sorted({int(s) for s in sizes}):
+            server.handle_requests(burst(k))
+        server.admission = adm
+        server.stats = type(server.stats)()
+        server.bse.store.stats = TierStats()
+        lat, offered, shed = [], 0, 0
+        t0 = time.perf_counter()
+        for k, g in zip(sizes, gaps):
+            reqs = burst(int(k))
+            tb = time.perf_counter()
+            scores = server.handle_requests(reqs)
+            live = [s for s in scores if s is not None]
+            if live:
+                jax.block_until_ready(live)
+            dt = time.perf_counter() - tb
+            offered += len(reqs)
+            shed += len(reqs) - len(live)
+            if live:                    # fully-shed bursts cost ~0: excluded
+                lat.append(dt)
+            time.sleep(g)
+        wall = time.perf_counter() - t0
+        st = server.stats
+        assert offered == st.n_requests + st.n_shed, \
+            f"conservation: offered={offered} served={st.n_requests} " \
+            f"shed={st.n_shed}"
+        n_degraded = server.bse.store.stats.n_degraded
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    p50, p95, p99 = (1e3 * float(np.percentile(lat, q))
+                     for q in (50, 95, 99))
+    offered_rps = offered / max(wall, 1e-9)
+    shed_rate = shed / max(offered, 1)
+    degrade_rate = n_degraded / max(st.n_requests, 1)
+    if bench is not None:
+        bench["slo"] = {
+            "n_requests": int(offered),
+            "n_served": int(st.n_requests),
+            "n_shed": int(shed),
+            "n_degraded": int(n_degraded),
+            "n_bursts": int(n_bursts),
+            "offered_rps": round(offered_rps, 1),
+            "admitted_rps_limit": rate_limit,
+            "p50_ms": round(p50, 3),
+            "p95_ms": round(p95, 3),
+            "p99_ms": round(p99, 3),
+            "shed_rate": round(shed_rate, 4),
+            "degrade_rate": round(degrade_rate, 4),
+            "hot_capacity": H, "working_set": N,
+        }
+    return [
+        {"name": "table5/slo/tail_latency",
+         "us_per_call": 1e3 * p99, "shards": 1,
+         "derived": f"p50/p95/p99={p50:.2f}/{p95:.2f}/{p99:.2f}ms"
+                    f"_over_{len(lat)}_admitted_bursts"},
+        {"name": "table5/slo/overload",
+         "us_per_call": 0.0, "shards": 1,
+         "derived": f"offered={offered_rps:.0f}rps_limit={rate_limit:.0f}rps"
+                    f"_shed={shed_rate:.1%}_degraded={degrade_rate:.1%}"
+                    f"_conserved={offered}=={st.n_requests}+{shed}"},
+    ]

@@ -16,6 +16,16 @@ demote to a host pool and spill to ``.npz`` segments under D.
 ``--async-ingest`` (with ``--queue-depth``/``--max-staleness``) runs BSE
 ingestion on a writer thread off the request path (serve/ingest.py):
 reads serve the last committed table version and never block on a fold.
+
+``--rate-limit R`` (requests/sec, headroom ``--rate-burst``) and
+``--max-concurrency K`` arm admission control (serve/admission.py):
+overloaded bursts SHED — every refused request prints an explicit shed
+line and is counted, never silently dropped. ``--cold-deadline-ms D``
+arms the tiered store's cold-tier circuit breaker (serve/tiered_store.py):
+cold reads slower than D open the circuit and later cold reads degrade to
+counted misses instead of stalling the request path. The run ends with a
+liveness/readiness snapshot (serve/health.py) and a metrics summary
+(serve/metrics.py) — the same surfaces a production sidecar would scrape.
 """
 from __future__ import annotations
 
@@ -120,6 +130,21 @@ def main():
                    help="max un-folded entries per user before a submit "
                         "folds inline (bounds how stale a served table "
                         "can be)")
+    p.add_argument("--rate-limit", type=float, default=None,
+                   help="token-bucket admission: sustained requests/sec; "
+                        "over-budget requests shed with an explicit None "
+                        "score (counted, never silent)")
+    p.add_argument("--rate-burst", type=float, default=None,
+                   help="token-bucket burst headroom (defaults to "
+                        "--rate-limit); needs --rate-limit")
+    p.add_argument("--max-concurrency", type=int, default=None,
+                   help="bound concurrent serving bursts; a burst arriving "
+                        "at the bound sheds whole (explicit None scores)")
+    p.add_argument("--cold-deadline-ms", type=float, default=None,
+                   help="cold-tier circuit breaker deadline: cold reads "
+                        "slower than this open the circuit and later cold "
+                        "reads degrade to counted misses instead of "
+                        "stalling (needs the tiered store)")
     p.add_argument("--tokens", type=int, default=32, help="LM decode steps")
     p.add_argument("--sdim-kv", action="store_true",
                    help="LM: SDIM bucket-compressed KV decode")
@@ -162,6 +187,31 @@ def main():
         p.error(f"--queue-depth must be >= 1, got {args.queue_depth}")
     if args.max_staleness < 1:
         p.error(f"--max-staleness must be >= 1, got {args.max_staleness}")
+    if args.rate_burst is not None and args.rate_limit is None:
+        p.error("--rate-burst is token-bucket headroom over --rate-limit; "
+                "give --rate-limit too")
+    if args.rate_limit is not None and args.rate_limit <= 0:
+        p.error(f"--rate-limit must be > 0 requests/sec, got "
+                f"{args.rate_limit}")
+    if args.rate_burst is not None and args.rate_burst <= 0:
+        p.error(f"--rate-burst must be > 0 tokens, got {args.rate_burst}")
+    if args.max_concurrency is not None and args.max_concurrency < 1:
+        p.error(f"--max-concurrency must be >= 1, got "
+                f"{args.max_concurrency}")
+    if args.cold_deadline_ms is not None and args.cold_deadline_ms <= 0:
+        p.error(f"--cold-deadline-ms must be > 0, got "
+                f"{args.cold_deadline_ms}")
+    if args.cold_deadline_ms is not None and not tiered:
+        p.error("--cold-deadline-ms arms the cold-tier circuit breaker, "
+                "which needs the tiered store (give --hot-capacity/"
+                "--store-dir/--policy/--warm-capacity)")
+    hardened = (args.rate_limit is not None
+                or args.max_concurrency is not None
+                or args.cold_deadline_ms is not None)
+    if mod.FAMILY != "recsys" and hardened:
+        p.error(f"--rate-limit/--max-concurrency/--cold-deadline-ms harden "
+                f"the CTR request path (recsys serving only); arch "
+                f"{args.arch!r} is family {mod.FAMILY!r}")
     # NOTE: --micro-batch may exceed --hot-capacity: BSEServer auto-chunks
     # oversized bursts into hot-capacity-sized sub-bursts (extra dispatches,
     # same scores), so no launcher-level rejection is needed
@@ -205,7 +255,13 @@ def main():
                                  fused=args.fused_serve,
                                  async_ingest=args.async_ingest,
                                  queue_depth=args.queue_depth,
-                                 max_staleness=args.max_staleness)
+                                 max_staleness=args.max_staleness,
+                                 max_concurrency=args.max_concurrency,
+                                 rate_limit=args.rate_limit,
+                                 rate_burst=args.rate_burst,
+                                 cold_deadline_s=(
+                                     None if args.cold_deadline_ms is None
+                                     else args.cold_deadline_ms / 1e3))
         bse = server.bse
         if args.async_ingest:
             bse.async_ingest.start()
@@ -221,11 +277,17 @@ def main():
         rng = np.random.default_rng(0)
         pending = []  # micro-batch buffer of (req_id, request tuple)
 
+        def report(r, scores):
+            if scores is None:          # shed by admission control — counted
+                print(f"req {r}: SHED (admission control)")
+            else:
+                print(f"req {r}: top candidate {int(jnp.argmax(scores))} "
+                      f"(score {float(jnp.max(scores)):+.3f})")
+
         def flush():
             for (r, _), scores in zip(pending,
                                       server.handle_requests([q for _, q in pending])):
-                print(f"req {r}: top candidate {int(jnp.argmax(scores))} "
-                      f"(score {float(jnp.max(scores)):+.3f})")
+                report(r, scores)
             pending.clear()
 
         for r in range(args.requests):
@@ -250,10 +312,15 @@ def main():
                     flush()
                 continue
             else:
-                scores = server.handle_request(f"u{r}", user, ci, cc,
-                                               jnp.zeros((args.candidates, cfg.ctx_dim)))
-            print(f"req {r}: top candidate {int(jnp.argmax(scores))} "
-                  f"(score {float(jnp.max(scores)):+.3f})")
+                req = (f"u{r}", user, ci, cc,
+                       jnp.zeros((args.candidates, cfg.ctx_dim)))
+                if server.admission is not None:
+                    # admission wraps the burst path only: route singles
+                    # through it as 1-bursts so --rate-limit still applies
+                    scores = server.handle_requests([req])[0]
+                else:
+                    scores = server.handle_request(*req)
+            report(r, scores)
         if pending:
             flush()
         if bse and bse.async_ingest is not None:
@@ -278,7 +345,30 @@ def main():
                       f"policy {bse.store.policy.name}): "
                       f"hit-rate {ts.hit_rate:.2f}, "
                       f"promote {ts.promote_bytes} B, "
-                      f"demote {ts.demote_bytes} B")
+                      f"demote {ts.demote_bytes} B"
+                      + (f", degraded {ts.n_degraded}"
+                         if ts.n_degraded else ""))
+        if server.admission is not None:
+            ast = server.admission.stats
+            print(f"admission: {ast.n_admitted} admitted, "
+                  f"{ast.n_shed} shed of {ast.n_offered} offered "
+                  f"(rate {args.rate_limit or 'off'}/s, "
+                  f"concurrency {args.max_concurrency or 'unbounded'})")
+        from repro.serve.health import health_snapshot
+        h = health_snapshot(server)
+        print(f"health: live={h['live']} ready={h['ready']} ["
+              + " ".join(f"{name}:{'ok' if c['ok'] else 'FAIL'}"
+                         for name, c in sorted(h["checks"].items())) + "]")
+        if server.metrics is not None:
+            snap = server.metrics.snapshot()
+            req = snap["histograms"].get("ctr.request_ms")
+            if req and req["count"]:
+                print(f"metrics: ctr.request_ms p50/p95/p99 "
+                      f"{req['p50']:.2f}/{req['p95']:.2f}/{req['p99']:.2f} "
+                      f"ms (n={req['count']})")
+            if snap["counters"]:
+                print("counters: " + ", ".join(
+                    f"{k}={v}" for k, v in sorted(snap["counters"].items())))
     elif mod.FAMILY == "lm":
         from repro.models.lm import LMModel
 

@@ -79,6 +79,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.engine import SDIMEngine
+from repro.serve.metrics import MetricsRegistry, observe_ms
 from repro.serve.table_store import ShardedTableStore, TableStore
 from repro.serve.tiered_store import (TieredTableStore, _atomic_json,
                                       _atomic_npz, burst_cap, burst_chunks,
@@ -133,13 +134,15 @@ class BSEIngestor:
     """
 
     def __init__(self, embed_fn: Callable, params: Any, engine: SDIMEngine,
-                 R: jax.Array, store: Any, stats: BSEStats):
+                 R: jax.Array, store: Any, stats: BSEStats,
+                 metrics: Optional[MetricsRegistry] = None):
         self.embed_fn = embed_fn
         self.params = params
         self.engine = engine
         self.R = R
         self.store = store
         self.stats = stats
+        self.metrics = metrics
         self.donate = True
 
     def ingest_histories(self, users: Sequence[Any], items: np.ndarray,
@@ -164,8 +167,10 @@ class BSEIngestor:
         m = jnp.asarray(masks) if masks is not None else None
         tables = self.engine.encode(seq_e, m, R=self.R)       # (B, G, U, d)
         tables.block_until_ready()
-        self.stats.encode_time_s += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        self.stats.encode_time_s += dt
         self.stats.n_encodes += len(users)
+        observe_ms(self.metrics, "bse.ingest_encode_ms", dt)
         # assign_fresh: every row is overwritten below, so a tiered store
         # drops stale warm/cold copies instead of promoting them
         self.store.write(self.store.assign_fresh(users), tables)
@@ -229,12 +234,14 @@ class BSEFetcher:
     promoting inline."""
 
     def __init__(self, engine: SDIMEngine, R: jax.Array, store: Any,
-                 wire_dtype: Any, stats: BSEStats):
+                 wire_dtype: Any, stats: BSEStats,
+                 metrics: Optional[MetricsRegistry] = None):
         self.engine = engine
         self.R = R
         self.store = store
         self.wire_dtype = jnp.dtype(wire_dtype)
         self.stats = stats
+        self.metrics = metrics
         self._async = None      # AsyncIngestor once attached
 
     def attach(self, runtime) -> None:
@@ -284,6 +291,7 @@ class BSEFetcher:
         tiered store, warm/cold users are batch-promoted and hit — with the
         burst auto-chunked when it touches more distinct users than the hot
         tier holds. Bytes are accounted for the array actually returned."""
+        t0 = time.perf_counter()
         view = self._view()
         if view is not None:
             slots, present = view.lookup(users)
@@ -294,6 +302,7 @@ class BSEFetcher:
             if cap is not None:
                 chunks = burst_chunks(list(users), cap)
                 if len(chunks) > 1:
+                    # chunked: each sub-burst observes its own dispatch
                     return jnp.concatenate(
                         [self.fetch_many(users[lo:hi]) for lo, hi in chunks])
             slots, present = self.store.lookup(users)
@@ -305,6 +314,11 @@ class BSEFetcher:
         self.stats.n_fetches += len(users)
         self.stats.n_misses += misses
         self.stats.bytes_transmitted += wire.size * self.wire_dtype.itemsize
+        if self.metrics is not None:
+            observe_ms(self.metrics, "bse.fetch_many_ms",
+                       time.perf_counter() - t0)
+            self.metrics.counter("bse.fetches").inc(len(users))
+            self.metrics.counter("bse.misses").inc(misses)
         return wire
 
     def serve_candidates(self, users: Sequence[Any], q: jax.Array,
@@ -319,6 +333,7 @@ class BSEFetcher:
         under async ingestion). What crosses to the CTR server is the
         (B, C, d) interest array in the wire dtype — C·d floats per user
         instead of G·U·d."""
+        t0 = time.perf_counter()
         view = self._view()
         if view is not None:
             slots, present = view.lookup(users)
@@ -343,9 +358,15 @@ class BSEFetcher:
                 data, slots, q, present=present, scales=scales,
                 R=self.R if R is None else R)
         wire = out.astype(self.wire_dtype)
+        misses = len(users) - int(present.sum())
         self.stats.n_fetches += len(users)
-        self.stats.n_misses += len(users) - int(present.sum())
+        self.stats.n_misses += misses
         self.stats.bytes_transmitted += wire.size * self.wire_dtype.itemsize
+        if self.metrics is not None:
+            observe_ms(self.metrics, "bse.serve_candidates_ms",
+                       time.perf_counter() - t0)
+            self.metrics.counter("bse.fetches").inc(len(users))
+            self.metrics.counter("bse.misses").inc(misses)
         return wire
 
 
@@ -369,6 +390,9 @@ class BSEServer:
         queue_depth: int = 1024,
         max_staleness: int = 64,
         drain_batch: int = 256,
+        metrics: Optional[MetricsRegistry] = None,
+        cold_deadline_s: Optional[float] = None,
+        clock: Optional[Callable[[], float]] = None,
     ):
         """``mesh`` (a Mesh or MeshCtx) shards the table store over the
         mesh's model axis (``ShardedTableStore``): capacity scales with the
@@ -396,23 +420,48 @@ class BSEServer:
         batches of ≤ ``drain_batch``; reads serve the last committed
         version and never block on a fold; a user's un-folded backlog is
         bounded by ``max_staleness`` (the submitting thread folds inline
-        past it — backpressure lands on writers, never on readers)."""
+        past it — backpressure lands on writers, never on readers).
+
+        ``metrics`` is the shared ``MetricsRegistry`` (one is created when
+        not given): every layer reports per-path latency histograms and
+        counters into it. ``cold_deadline_s`` arms the tiered store's
+        cold-tier circuit breaker (degrade-to-miss, see
+        serve/tiered_store.py); ``clock`` injects a virtual clock for
+        deterministic fault tests."""
         self.engine = engine
         self.R = engine.R if R is None else R
         self.wire_dtype = jnp.dtype(wire_dtype)
+        self.metrics = MetricsRegistry() if metrics is None else metrics
         cfg = engine.cfg
         tiered = is_tiered(hot_capacity, store_dir, policy, warm_capacity)
+        if cold_deadline_s is not None and not tiered and store is None:
+            raise ValueError(
+                "cold_deadline_s arms the cold-tier circuit breaker, which "
+                "needs the tiered store (pass hot_capacity=/store_dir=/"
+                "policy=/warm_capacity=)")
         if store is not None:
             assert tuple(store.row_shape) == \
                 (cfg.n_groups, cfg.n_buckets, cfg.d), \
                 (store.row_shape, cfg)
             self.store = store
+            # an injected store (e.g. TieredTableStore.restore) joins this
+            # server's observability/runtime config
+            if isinstance(store, TieredTableStore):
+                store.metrics = self.metrics
+                if clock is not None:
+                    store._clock = clock
+                if cold_deadline_s is not None and store.breaker is None:
+                    from repro.serve.admission import CircuitBreaker
+                    store.breaker = CircuitBreaker(
+                        deadline_s=cold_deadline_s, clock=store._clock)
         elif tiered:
             self.store = TieredTableStore(
                 cfg.n_groups, cfg.n_buckets, cfg.d,
                 hot_capacity=capacity if hot_capacity is None else hot_capacity,
                 mesh=mesh, policy=policy or "clock", store_dir=store_dir,
-                warm_capacity=warm_capacity, dtype=table_dtype)
+                warm_capacity=warm_capacity, dtype=table_dtype,
+                cold_deadline_s=cold_deadline_s, clock=clock,
+                metrics=self.metrics)
         elif mesh is None:
             self.store = TableStore(cfg.n_groups, cfg.n_buckets, cfg.d,
                                     capacity=capacity, dtype=table_dtype)
@@ -423,15 +472,18 @@ class BSEServer:
         self.tables = _TablesView(self.store)
         self.stats = BSEStats()
         self.ingestor = BSEIngestor(embed_fn, params, engine, self.R,
-                                    self.store, self.stats)
+                                    self.store, self.stats,
+                                    metrics=self.metrics)
         self.fetcher = BSEFetcher(engine, self.R, self.store,
-                                  self.wire_dtype, self.stats)
+                                  self.wire_dtype, self.stats,
+                                  metrics=self.metrics)
         self.async_ingest = None
         if async_ingest:
             from repro.serve.ingest import AsyncIngestor
             self.async_ingest = AsyncIngestor(
                 self.ingestor, self.store, queue_depth=queue_depth,
-                max_staleness=max_staleness, drain_batch=drain_batch)
+                max_staleness=max_staleness, drain_batch=drain_batch,
+                metrics=self.metrics)
             self.fetcher.attach(self.async_ingest)
 
     # the params/embed snapshot lives on the write half; expose it here so

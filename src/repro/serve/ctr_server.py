@@ -38,12 +38,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.ctr import CTRModel
+from repro.serve.admission import AdmissionController
 from repro.serve.bse_server import BSEServer
+from repro.serve.metrics import MetricsRegistry, observe_ms
 
 
 @dataclasses.dataclass
 class ServeStats:
-    n_requests: int = 0
+    n_requests: int = 0        # requests actually served
+    n_shed: int = 0            # requests refused by admission (never served)
     total_time_s: float = 0.0
     fetch_time_s: float = 0.0
 
@@ -61,7 +64,13 @@ class CTRServer:
               warm_capacity: int = None, table_dtype: Any = jnp.float32,
               fused: bool = False, async_ingest: bool = False,
               queue_depth: int = 1024,
-              max_staleness: int = 64) -> "CTRServer":
+              max_staleness: int = 64,
+              max_concurrency: int = None,
+              rate_limit: float = None,
+              rate_burst: float = None,
+              cold_deadline_s: float = None,
+              metrics: MetricsRegistry = None,
+              clock=None) -> "CTRServer":
         """Mesh-aware construction of the whole serving pair: wires the
         model's behavior-embedding fn and checkpointed hash family ``R``
         into a ``BSEServer`` (decoupled mode), sharding its table store over
@@ -84,11 +93,24 @@ class CTRServer:
         (serve/ingest.py): missing users are enqueued, not encoded inline
         — they score with zero long-term interest until the writer loop
         folds and commits them (bounded by ``max_staleness``; queue drops
-        past ``queue_depth`` are counted). Reads never block on a fold."""
+        past ``queue_depth`` are counted). Reads never block on a fold.
+
+        Production runtime knobs (serve/admission.py, serve/metrics.py):
+        ``max_concurrency`` bounds concurrent ``handle_requests`` bursts
+        (excess bursts shed whole — every request returns an explicit
+        ``None`` score and is counted, never silently dropped);
+        ``rate_limit`` (requests/sec, burst headroom ``rate_burst``)
+        token-bucket-limits admission — the tail of an over-budget burst
+        sheds. ``cold_deadline_s`` arms the tiered store's cold-tier
+        circuit breaker (degrade-to-miss instead of stalling on a slow
+        disk). ``metrics`` is the shared registry (created when omitted)
+        every layer reports into; ``clock`` injects a virtual clock for
+        deterministic fault tests."""
         from repro.serve.tiered_store import is_tiered
 
         bse = None
         tiered = is_tiered(hot_capacity, store_dir, policy, warm_capacity)
+        metrics = MetricsRegistry() if metrics is None else metrics
         if mode != "decoupled" and async_ingest:
             raise ValueError(
                 f"async ingestion feeds the BSE table store, which only the "
@@ -105,6 +127,11 @@ class CTRServer:
             raise ValueError(
                 f"fused serving reads the BSE table store, which only the "
                 f"decoupled deployment has (mode={mode!r})")
+        if cold_deadline_s is not None and not tiered:
+            raise ValueError(
+                "cold_deadline_s arms the cold-tier circuit breaker, which "
+                "needs the tiered store (pass hot_capacity=/store_dir=/"
+                "policy=/warm_capacity=)")
         if mode == "decoupled":
             embed = lambda p, i, c: model._embed_behaviors(
                 p, jnp.asarray(i), jnp.asarray(c))
@@ -117,12 +144,25 @@ class CTRServer:
                             table_dtype=table_dtype,
                             async_ingest=async_ingest,
                             queue_depth=queue_depth,
-                            max_staleness=max_staleness)
-        return cls(model, params, bse, mode=mode, fused=fused)
+                            max_staleness=max_staleness,
+                            metrics=metrics,
+                            cold_deadline_s=cold_deadline_s,
+                            clock=clock)
+        admission = None
+        if max_concurrency is not None or rate_limit is not None:
+            import time as _time
+            admission = AdmissionController(
+                max_concurrency=max_concurrency, rate=rate_limit,
+                burst=rate_burst,
+                clock=_time.monotonic if clock is None else clock)
+        return cls(model, params, bse, mode=mode, fused=fused,
+                   admission=admission, metrics=metrics)
 
     def __init__(self, model: CTRModel, params: Any,
                  bse_server: Optional[BSEServer] = None,
-                 mode: str = "decoupled", fused: bool = False):
+                 mode: str = "decoupled", fused: bool = False,
+                 admission: Optional[AdmissionController] = None,
+                 metrics: Optional[MetricsRegistry] = None):
         assert mode in ("decoupled", "inline", "target_attention")
         if mode == "decoupled":
             assert bse_server is not None
@@ -131,6 +171,9 @@ class CTRServer:
         self.bse = bse_server
         self.mode = mode
         self.fused = fused
+        self.admission = admission
+        self.metrics = metrics if metrics is not None else (
+            bse_server.metrics if bse_server is not None else None)
         self.stats = ServeStats()
         self._score_table = jax.jit(
             lambda p, u, ci, cc, ctx, tb: model.score_candidates(
@@ -174,8 +217,12 @@ class CTRServer:
         else:
             scores = self._score_raw(self.params, user_batch, cand_items, cand_cats, ctx)
         scores.block_until_ready()
-        self.stats.total_time_s += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        self.stats.total_time_s += dt
         self.stats.n_requests += 1
+        if self.metrics is not None:
+            observe_ms(self.metrics, "ctr.request_ms", dt)
+            self.metrics.counter("ctr.requests").inc(1)
         return scores
 
     def handle_requests(self, requests) -> list:
@@ -189,9 +236,40 @@ class CTRServer:
         ``ingest_histories`` and reads all tables in ONE ``fetch_many``
         (on an async-ingest server the encode is enqueued instead — the
         request never waits on the write path). An empty burst is a no-op:
-        ``[]`` in, ``[]`` out, nothing dispatched."""
+        ``[]`` in, ``[]`` out, nothing dispatched.
+
+        With an ``AdmissionController`` attached (``CTRServer.build``'s
+        ``max_concurrency``/``rate_limit``), overload SHEDS instead of
+        queueing: a burst arriving while ``max_concurrency`` bursts are in
+        flight is refused whole; a burst over the token-bucket budget is
+        served as an admitted prefix. Every shed request still gets a list
+        slot — an explicit ``None`` score — and is counted
+        (``stats.n_shed``, ``ctr.shed``): callers always receive
+        ``len(requests)`` entries, degradation is never silent."""
         if not requests:
             return []
+        adm = self.admission
+        if adm is None:
+            return self._handle_admitted(requests)
+        if not adm.enter():
+            self._note_shed(len(requests))
+            adm.shed_all(len(requests))
+            return [None] * len(requests)
+        try:
+            k = adm.admit(len(requests))
+            if k < len(requests):
+                self._note_shed(len(requests) - k)
+            out = self._handle_admitted(requests[:k]) if k else []
+            return out + [None] * (len(requests) - k)
+        finally:
+            adm.exit()
+
+    def _note_shed(self, n: int) -> None:
+        self.stats.n_shed += n
+        if self.metrics is not None:
+            self.metrics.counter("ctr.shed").inc(n)
+
+    def _handle_admitted(self, requests) -> list:
         t0 = time.perf_counter()
         users = [r[0] for r in requests]
         n_cands = [len(r[2]) for r in requests]
@@ -249,8 +327,12 @@ class CTRServer:
         else:
             scores = self._score_many_raw(self.params, hist, ci, cc, ctx)
         scores.block_until_ready()
-        self.stats.total_time_s += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        self.stats.total_time_s += dt
         self.stats.n_requests += len(requests)
+        if self.metrics is not None:
+            observe_ms(self.metrics, "ctr.request_ms", dt)
+            self.metrics.counter("ctr.requests").inc(len(requests))
         # one device->host transfer, then per-request views (slicing the
         # device array would issue one tiny device op per request)
         host = np.asarray(scores)

@@ -189,7 +189,8 @@ class AsyncIngestor:
     """
 
     def __init__(self, ingestor: Any, store: Any, queue_depth: int = 1024,
-                 max_staleness: int = 64, drain_batch: int = 256):
+                 max_staleness: int = 64, drain_batch: int = 256,
+                 metrics: Any = None):
         if queue_depth < 1:
             raise ValueError(f"queue_depth must be >= 1, got {queue_depth}")
         if max_staleness < 1:
@@ -203,6 +204,7 @@ class AsyncIngestor:
         self.max_staleness = max_staleness
         self.drain_batch = drain_batch
         self.stats = IngestStats()
+        self.metrics = metrics          # optional MetricsRegistry
         # double-buffer safety: no device buffer a CommittedView may still
         # reference is ever donated (writes copy instead)
         ingestor.donate = False
@@ -235,6 +237,13 @@ class AsyncIngestor:
         ``max_staleness`` (the submit path folds inline first)."""
         return self._pending.get(user, 0)
 
+    def _note_drop(self) -> None:
+        """Backpressure rejection: counted in stats AND the metrics
+        registry (call with the queue lock held)."""
+        self.stats.n_dropped += 1
+        if self.metrics is not None:
+            self.metrics.counter("ingest.dropped").inc()
+
     def _bound_staleness(self, user: Any) -> None:
         if self._pending.get(user, 0) < self.max_staleness:
             return
@@ -250,7 +259,7 @@ class AsyncIngestor:
         self._bound_staleness(user)
         with self._qlock:
             if len(self._q) >= self.queue_depth:
-                self.stats.n_dropped += 1
+                self._note_drop()
                 accepted = False
             else:
                 self._q.append((_EVENT, user, int(item), int(cat)))
@@ -288,7 +297,7 @@ class AsyncIngestor:
                 else:
                     self._pending.pop(user, None)
             if len(self._q) >= self.queue_depth:
-                self.stats.n_dropped += 1
+                self._note_drop()
                 return False
             self._q.append((_HISTORY, user, np.asarray(items),
                             np.asarray(cats),
@@ -310,7 +319,7 @@ class AsyncIngestor:
             if user in self._touch_pending:
                 return True
             if len(self._q) >= self.queue_depth:
-                self.stats.n_dropped += 1
+                self._note_drop()
                 return False
             self._q.append((_TOUCH, user))
             if self._oldest is None:
@@ -386,10 +395,14 @@ class AsyncIngestor:
                 else:
                     self._fold_touches([e[1] for e in group])
             self._commit(batch)
-            self.stats.fold_time_s += time.perf_counter() - t0
+            dt = time.perf_counter() - t0
+            self.stats.fold_time_s += dt
             self.stats.n_folds += 1
             self.stats.last_drain_batch = n
             self.stats.max_drain_batch = max(self.stats.max_drain_batch, n)
+            if self.metrics is not None:
+                self.metrics.histogram("ingest.fold_ms").observe(1e3 * dt)
+                self.metrics.counter("ingest.folded").inc(n)
             return n
 
     def _fold_touches(self, users: Sequence[Any]) -> None:
@@ -425,6 +438,8 @@ class AsyncIngestor:
             # the previous view keep gathering from its (undonated) buffers
             self.committed = CommittedView(self._version, self._store)
             self.stats.queue_depth = len(self._q)
+            if self.metrics is not None:
+                self.metrics.gauge("ingest.queue_depth").set(len(self._q))
 
     def flush(self) -> None:
         """Drain until empty — quiesce before snapshot/shutdown/asserts."""
@@ -482,16 +497,46 @@ class AsyncIngestor:
             self._wake.wait(0.005 if n else 0.02)
             self._wake.clear()
 
-    def stop(self, flush: bool = True) -> None:
+    def stop(self, flush: bool = True, timeout: Optional[float] = None
+             ) -> bool:
         """Join the writer loop; by default drain whatever is left so no
-        accepted entry is lost on shutdown."""
+        accepted entry is lost on shutdown. Shutdown ordering contract
+        (drain-or-count, never hang, never lose silently):
+
+          * signal the loop FIRST, then join — a writer mid-fold finishes
+            its current batch and exits;
+          * ``timeout`` bounds the join. A writer stuck in a fold (e.g. a
+            stalled embed) leaves ``stop`` returning ``False`` with every
+            unfolded entry still queued AND counted in
+            ``stats.queue_depth`` — nothing is silently lost, and the
+            (daemon) thread drains the backlog if it ever unsticks;
+          * ``flush=True`` then drains the remainder inline — bounded by
+            the same ``timeout`` on the fold lock, so a stuck fold can
+            never turn shutdown into a hang;
+          * ``flush=False`` keeps the queue as-is: entries remain counted
+            (``stats.queue_depth``/``n_enqueued`` vs ``n_*_folded``).
+
+        Returns ``True`` iff the runtime fully quiesced."""
         t, self._thread = self._thread, None
         if t is not None:
             self._stop = True
             self._wake.set()
-            t.join()
+            t.join(timeout)
+            if t.is_alive():
+                # stuck mid-fold: leave the daemon to it; report honestly
+                with self._qlock:
+                    self.stats.note_depth(len(self._q))
+                return False
         if flush:
+            if timeout is not None:
+                if not self._fold_lock.acquire(timeout=timeout):
+                    with self._qlock:
+                        self.stats.note_depth(len(self._q))
+                    return False
+                self._fold_lock.release()
             self.flush()
+        with self._qlock:
+            return len(self._q) == 0
 
 
 def _segment(batch: Sequence[tuple]) -> list[tuple[int, list]]:

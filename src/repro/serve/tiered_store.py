@@ -53,12 +53,15 @@ import glob
 import json
 import os
 import shutil
+import time
 from typing import Any, Iterator, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serve.admission import CircuitBreaker
+from repro.serve.metrics import observe_ms
 from repro.serve.table_store import ShardedTableStore, TableStore
 
 
@@ -510,6 +513,8 @@ class TierStats:
     demotions: int = 0          # hot -> warm
     spills: int = 0             # warm -> cold
     misses: int = 0             # user in no tier (lookup only)
+    n_degraded: int = 0         # cold users served as misses (breaker open
+                                # or cold read failed) instead of stalling
     promote_bytes: int = 0      # bytes written hot-ward (warm/cold -> hot)
     demote_bytes: int = 0       # bytes read off the hot tier on demotion
     spill_bytes: int = 0        # bytes written to cold segments
@@ -548,7 +553,18 @@ class TieredTableStore:
                  dtype: Any = jnp.float32,
                  mesh: Any = None, policy="clock",
                  store_dir: Optional[str] = None,
-                 warm_capacity: Optional[int] = None):
+                 warm_capacity: Optional[int] = None,
+                 cold_deadline_s: Optional[float] = None,
+                 breaker: Optional[CircuitBreaker] = None,
+                 clock=None, metrics=None):
+        """``cold_deadline_s`` arms a ``CircuitBreaker`` around the cold
+        tier: a cold segment read slower than the deadline (or raising)
+        opens the circuit, after which cold users on the READ path degrade
+        to counted misses (``stats.n_degraded``) instead of stalling every
+        request behind a sick disk; write-path promotions (``create=True``)
+        always read — correctness over latency off the request path. Pass
+        ``breaker`` to share/inject one, ``clock`` for a virtual clock
+        (tests), ``metrics`` to export tier counters + cold-read latency."""
         if hot_capacity < 1:
             raise ValueError(
                 f"hot_capacity must be >= 1, got {hot_capacity} — a tiered "
@@ -568,6 +584,12 @@ class TieredTableStore:
         self.warm_capacity = warm_capacity
         self.policy = make_policy(policy)
         self.stats = TierStats()
+        self._clock = time.perf_counter if clock is None else clock
+        if breaker is None and cold_deadline_s is not None:
+            breaker = CircuitBreaker(deadline_s=cold_deadline_s,
+                                     clock=self._clock)
+        self.breaker = breaker
+        self.metrics = metrics
 
     # ------------------------------------------------------------------
     # delegated surface
@@ -677,6 +699,14 @@ class TieredTableStore:
                 new_u.append(u)
             else:
                 self.stats.misses += 1
+        # circuit breaker: with the cold tier marked sick, READ-path cold
+        # users degrade to counted misses instead of stalling the request
+        # behind a slow disk; write-path promotions always read (create=True
+        # folds data the caller is about to combine with the stored row)
+        if (cold_u and not create and self.breaker is not None
+                and not self.breaker.allow()):
+            self._degrade(cold_u)
+            cold_u = []
         need = len(warm_u) + len(cold_u) + len(new_u)
         if len(hot_u) + need > self.hot_capacity:
             raise ValueError(
@@ -691,6 +721,25 @@ class TieredTableStore:
         free = self.hot_capacity - len(self.hot)
         if free < need:
             self._demote(need - free, pinned=set(uniq))
+        # cold read FIRST (timed, breaker-recorded): if it fails we degrade
+        # those users before the warm pool is mutated, so no warm row is
+        # taken for a promotion that never happens
+        cold_parts = None
+        if cold_u:
+            t0 = self._clock()
+            try:
+                cold_parts = self.cold.load_remove(cold_u)
+            except Exception:
+                if self.breaker is None or create:
+                    raise
+                self.breaker.record_failure()
+                self._degrade(cold_u)
+                cold_u = []
+            else:
+                dt = self._clock() - t0
+                if self.breaker is not None:
+                    self.breaker.record(dt)
+                observe_ms(self.metrics, "tier.cold_read_ms", dt)
         promote = warm_u + cold_u
         if promote:
             rparts, sparts = [], []
@@ -699,9 +748,8 @@ class TieredTableStore:
                 rparts.append(r)
                 sparts.append(s)
             if cold_u:
-                r, s = self.cold.load_remove(cold_u)
-                rparts.append(r)
-                sparts.append(s)
+                rparts.append(cold_parts[0])
+                sparts.append(cold_parts[1])
             rows = rparts[0] if len(rparts) == 1 else np.concatenate(rparts)
             scales = None
             if self.hot.quantized:
@@ -718,6 +766,8 @@ class TieredTableStore:
             self.stats.cold_promotions += len(cold_u)
             self.stats.promote_bytes += rows.nbytes + (
                 0 if scales is None else scales.nbytes)
+            if self.metrics is not None:
+                self.metrics.counter("tier.promotions").inc(len(promote))
         if new_u:
             self.hot.assign(new_u)     # fresh slots read zero; no device op
         for u in promote + new_u:
@@ -729,6 +779,18 @@ class TieredTableStore:
         # the store from ever growing
         assert self.hot.capacity == self.hot_capacity, \
             (self.hot.capacity, self.hot_capacity)
+        if self.metrics is not None:
+            self.metrics.gauge("tier.hot_fill").set(
+                len(self.hot) / self.hot_capacity)
+
+    def _degrade(self, cold_users: Sequence[Any]) -> None:
+        """Serve cold users as misses THIS burst (counted, surfaced): they
+        stay in the cold index untouched and promote normally once the
+        breaker closes. The fetcher's present=False zero-row contract makes
+        the degradation visible per request, never a silent wrong answer."""
+        self.stats.n_degraded += len(cold_users)
+        if self.metrics is not None:
+            self.metrics.counter("tier.degraded").inc(len(cold_users))
 
     def _demote(self, k: int, pinned: set) -> None:
         victims = self.policy.victims(k, exclude=pinned)
@@ -745,6 +807,8 @@ class TieredTableStore:
         self.stats.demotions += k
         self.stats.demote_bytes += vrows.nbytes + (
             0 if vscales is None else vscales.nbytes)
+        if self.metrics is not None:
+            self.metrics.counter("tier.demotions").inc(k)
 
     def _spill_overflow(self) -> None:
         if self.warm_capacity is None or self.cold is None:

@@ -14,6 +14,38 @@ def pytest_configure(config):
 
 
 # ---------------------------------------------------------------------------
+# Virtual clock: the fault-injection suite (tests/test_runtime_faults.py)
+# drives every timeout/deadline — circuit breaker, token bucket, cold-read
+# timing — deterministically, with NO wall-clock sleeps. Inject it wherever
+# a component takes a ``clock=`` callable (serve/admission.py,
+# serve/tiered_store.py, BSEServer/CTRServer.build ``clock=``).
+# ---------------------------------------------------------------------------
+class VirtualClock:
+    """Monotonic fake clock: calling it reads the time, ``advance`` moves
+    it. Thread-safe so injected fault delays can tick from any thread."""
+
+    def __init__(self, start: float = 0.0):
+        import threading
+        self._t = float(start)
+        self._lock = threading.Lock()
+
+    def __call__(self) -> float:
+        with self._lock:
+            return self._t
+
+    def advance(self, dt: float) -> float:
+        assert dt >= 0, f"virtual time cannot go backwards ({dt})"
+        with self._lock:
+            self._t += dt
+            return self._t
+
+
+@pytest.fixture
+def vclock():
+    return VirtualClock()
+
+
+# ---------------------------------------------------------------------------
 # Optional hypothesis (see requirements-dev.txt): property-based tests import
 # ``given/settings/st`` from here. Without hypothesis installed the decorated
 # tests turn into clean skips while the deterministic suites still run.

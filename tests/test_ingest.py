@@ -267,6 +267,58 @@ def test_writer_thread_drains_and_stops_clean():
     assert rt.stats.queue_depth == 0
 
 
+def test_shutdown_with_stalled_fold_returns_false_never_hangs():
+    """ISSUE 8 shutdown-ordering regression: ``stop()`` on a runtime whose
+    writer is wedged mid-fold (stalled embed) must come back ``False``
+    within the timeout, with every unfolded entry still queued AND counted
+    — never a hang, never a silent loss. Once the stall clears, a flush
+    drains the stranded backlog and fold conservation holds."""
+    stalled = threading.Event()
+    release = threading.Event()
+
+    def stalling_embed(params, items, cats):
+        stalled.set()
+        release.wait()                       # wedged until the test says go
+        return _embed(params, items, cats)
+
+    srv = BSEServer(stalling_embed, None, _engine(), wire_dtype=jnp.float32,
+                    async_ingest=True, drain_batch=1)
+    rt = srv.async_ingest
+    rt.start()
+    writer = rt._thread
+    rt.submit_event("a", 1, 2)
+    assert stalled.wait(10.0)                # writer is inside the fold
+    rt.submit_event("b", 3, 4)               # stranded behind the stall
+    assert rt.stop(flush=True, timeout=0.2) is False    # bounded, honest
+    assert rt.stats.n_enqueued == 2
+    assert rt.stats.queue_depth == 1         # the stranded entry, counted
+    # unstick the fold: the (signalled) writer finishes its batch and exits
+    release.set()
+    writer.join(10.0)
+    assert not writer.is_alive()
+    rt.flush()                               # drain what the writer left
+    assert rt.stats.n_events_folded == 2
+    assert rt.stats.queue_depth == 0
+    assert rt.stats.n_enqueued == rt.stats.n_events_folded
+    assert srv.fetch("a") is not None and srv.fetch("b") is not None
+
+
+def test_stop_without_flush_keeps_queue_counted():
+    """``stop(flush=False)`` must report non-quiescence and leave the
+    queue intact and counted — shutdown never silently discards accepted
+    entries; a later ``stop(flush=True)`` drains them."""
+    _, asyn = _pair()
+    rt = asyn.async_ingest
+    rt.submit_event("a", 1, 2)
+    rt.submit_event("b", 3, 4)
+    assert rt.stop(flush=False) is False
+    assert rt.stats.queue_depth == 2
+    assert rt.stats.n_dropped == 0
+    assert rt.stop(flush=True) is True
+    assert rt.stats.n_events_folded == 2
+    assert rt.stats.queue_depth == 0
+
+
 # ---------------------------------------------------------------------------
 # tiered composition: touches promote off the request path
 # ---------------------------------------------------------------------------

@@ -1,0 +1,726 @@
+"""Fault-injection harness for the production serving runtime (ISSUE 8).
+
+The paper's §4.4 claim — BSE is "latency-free for the CTR server" — is a
+*runtime* guarantee, so it is pinned here by injecting the failures that
+break it in production and asserting the degradation contract:
+
+  * **slow / failing cold tier** — a delegating ``FaultyCold`` wrapper
+    around the real ``ColdStore`` adds virtual-clock delay or raises; the
+    circuit breaker must open, cold READS must degrade to counted
+    zero-row misses (``TierStats.n_degraded``, ``tier.degraded``) with NO
+    cold-store touch and NO time spent, half-open probes must close the
+    circuit once the disk recovers, and the WRITE path must keep raising
+    (correctness over latency off the request path);
+  * **bursty overload** — a seeded open-loop burst generator through the
+    ``AdmissionController``: shed requests come back as explicit ``None``
+    scores, every ledger column sums (offered == admitted + shed), and
+    nothing is silently dropped;
+  * **stalled / dead writer loop** — the health surface flips liveness
+    only when a dead writer strands queued work;
+  * **concurrent metrics readers** — registry snapshots are atomic cuts:
+    counters are monotone across snapshots and quantiles stay ordered
+    while writer threads hammer the instruments.
+
+Everything timing-related runs on the ``vclock`` fixture (tests/conftest):
+deadlines, refills and half-open windows advance by explicit
+``vclock.advance`` — no wall-clock sleeps anywhere. The hypothesis sweeps
+(conservation across random overload schedules, both engine backends) are
+derandomized so `make test-faults` is deterministic.
+"""
+import functools
+import threading
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import VirtualClock, given, settings, st
+from repro.core.engine import EngineConfig, SDIMEngine
+from repro.core.interest import InterestConfig
+from repro.data.synthetic import SyntheticCTRConfig, generate_batch
+from repro.models.ctr import CTRConfig, CTRModel
+from repro.serve.admission import (AdmissionController, CircuitBreaker,
+                                   TokenBucket)
+from repro.serve.bse_server import BSEServer
+from repro.serve.ctr_server import CTRServer
+from repro.serve.health import health_snapshot
+from repro.serve.metrics import MetricsRegistry
+
+D = 16
+N_ITEMS, N_CATS = 64, 16
+_EMB_I = jax.random.normal(jax.random.PRNGKey(31), (N_ITEMS, D // 2))
+_EMB_C = jax.random.normal(jax.random.PRNGKey(32), (N_CATS, D // 2))
+BACKENDS = ["xla", "pallas"]
+
+
+def _embed(params, items, cats):
+    return jnp.concatenate([_EMB_I[jnp.asarray(items) % N_ITEMS],
+                            _EMB_C[jnp.asarray(cats) % N_CATS]], axis=-1)
+
+
+@functools.lru_cache(maxsize=None)
+def _engine(backend="xla"):
+    return SDIMEngine(EngineConfig(
+        m=12, tau=2, d=D, backend=backend,
+        interpret=None if backend == "xla" else
+        jax.default_backend() != "tpu"))
+
+
+def _tiered(tmp, clock, hot=8, deadline=0.05, **kw):
+    """Tiered server with an armed cold-tier breaker on a virtual clock.
+    ``warm_capacity=0`` spills every demotion straight to disk, so any
+    non-resident user is a COLD read — the tier the faults target."""
+    import os
+    return BSEServer(_embed, None, _engine(), wire_dtype=jnp.float32,
+                     hot_capacity=hot, warm_capacity=0,
+                     store_dir=os.path.join(str(tmp), "cold"),
+                     cold_deadline_s=deadline, clock=clock, **kw)
+
+
+def _fill(srv, n_users, chunk=8, seed=0):
+    """Ingest ``n_users`` histories in hot-capacity chunks: with hot=8 and
+    warm=0 the last chunk stays hot and everything earlier lands cold."""
+    rng = np.random.default_rng(seed)
+    for lo in range(0, n_users, chunk):
+        us = list(range(lo, min(lo + chunk, n_users)))
+        srv.ingest_histories(us, rng.integers(0, N_ITEMS, (len(us), 9)),
+                             rng.integers(0, N_CATS, (len(us), 9)))
+
+
+class FaultyCold:
+    """Delegating fault injector around a real ``ColdStore``: reads charge
+    ``delay`` virtual seconds (the sick-disk model) or raise (``fail``).
+    Writes (spill/remove) pass through untouched — the faults are
+    read-side. ``in``/``len`` resolve dunders on the TYPE, bypassing
+    ``__getattr__``, so both are defined explicitly."""
+
+    def __init__(self, inner, clock, delay=0.0, fail=False):
+        self._inner = inner
+        self._clock = clock
+        self.delay = delay
+        self.fail = fail
+        self.n_reads = 0
+
+    def load_remove(self, users):
+        self.n_reads += 1
+        if self.fail:
+            raise OSError("injected cold-tier read failure")
+        if self.delay:
+            self._clock.advance(self.delay)
+        return self._inner.load_remove(users)
+
+    def __contains__(self, user):
+        return user in self._inner
+
+    def __len__(self):
+        return len(self._inner)
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+
+# ---------------------------------------------------------------------------
+# primitives: token bucket / circuit breaker / admission controller
+# ---------------------------------------------------------------------------
+def test_token_bucket_refill_and_prefix_admission(vclock):
+    tb = TokenBucket(rate=10.0, burst=5, clock=vclock)
+    assert tb.try_acquire(5)                 # starts full
+    assert not tb.try_acquire(1)             # empty: all-or-nothing refuses
+    assert tb.acquire_upto(3) == 0
+    vclock.advance(0.25)                     # 2.5 tokens back
+    assert tb.acquire_upto(4) == 2           # prefix of the burst
+    vclock.advance(100.0)
+    assert tb.tokens == pytest.approx(5.0)   # capped at burst
+
+
+def test_primitive_validation():
+    with pytest.raises(ValueError):
+        TokenBucket(rate=0.0)
+    with pytest.raises(ValueError):
+        TokenBucket(rate=1.0, burst=0.5)
+    with pytest.raises(ValueError):
+        CircuitBreaker(deadline_s=0.0)
+    with pytest.raises(ValueError):
+        CircuitBreaker(deadline_s=1.0, failure_threshold=0)
+    with pytest.raises(ValueError):
+        AdmissionController(max_concurrency=0)
+
+
+def test_circuit_breaker_state_machine(vclock):
+    br = CircuitBreaker(deadline_s=0.05, reset_timeout_s=1.0, clock=vclock)
+    assert br.state == "closed" and br.allow()
+    br.record(0.01)                          # fast: stays closed
+    assert br.state == "closed"
+    br.record(0.5)                           # slow: opens (threshold 1)
+    assert br.state == "open" and br.n_opens == 1
+    assert not br.allow()                    # open: callers degrade
+    vclock.advance(0.5)
+    assert not br.allow()                    # reset window not elapsed
+    vclock.advance(0.5)
+    assert br.allow()                        # half-open: exactly one probe
+    assert br.n_half_opens == 1
+    assert not br.allow()                    # second caller still blocked
+    br.record(0.5)                           # probe slow: re-opens
+    assert br.state == "open" and br.n_opens == 2
+    vclock.advance(1.0)
+    assert br.allow()
+    br.record(0.01)                          # probe fast: closes
+    assert br.state == "closed" and br.n_closes == 1
+    assert br.snapshot() == {"state": "closed", "n_opens": 2,
+                             "n_half_opens": 2, "n_closes": 1,
+                             "deadline_s": 0.05}
+
+
+def test_circuit_breaker_failure_threshold(vclock):
+    br = CircuitBreaker(deadline_s=0.05, failure_threshold=3, clock=vclock)
+    br.record_failure()
+    br.record_failure()
+    br.record_success()                      # resets the consecutive count
+    br.record_failure()
+    br.record_failure()
+    assert br.state == "closed"
+    br.record_failure()                      # third consecutive: opens
+    assert br.state == "open"
+
+
+def test_admission_controller_slots_and_ledger(vclock):
+    adm = AdmissionController(max_concurrency=2, rate=10.0, burst=4,
+                              clock=vclock)
+    assert adm.enter() and adm.enter()
+    assert not adm.enter()                   # bound hit: shed whole burst
+    adm.shed_all(5)
+    assert adm.admit(6) == 4                 # bucket covers a prefix
+    adm.exit()
+    adm.exit()
+    with pytest.raises(AssertionError):
+        adm.exit()                           # unbalanced exit is a bug
+    s = adm.stats
+    assert s.n_offered == 11
+    assert s.n_admitted == 4
+    assert s.n_shed_concurrency == 5 and s.n_shed_rate == 2
+    assert s.n_offered == s.n_admitted + s.n_shed
+    assert adm.inflight == 0
+
+
+# ---------------------------------------------------------------------------
+# metrics: streaming quantiles, monotone snapshots under concurrency
+# ---------------------------------------------------------------------------
+def test_histogram_streaming_quantiles_accurate():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat_ms")
+    vals = np.random.default_rng(0).lognormal(mean=1.0, sigma=1.0, size=5000)
+    for v in vals:
+        h.observe(float(v))
+    for q in (0.5, 0.95, 0.99):
+        exact = float(np.quantile(vals, q))
+        # log-spaced buckets at 2**0.25 growth: ~19% worst-case relative
+        # error inside a bucket
+        assert h.quantile(q) == pytest.approx(exact, rel=0.25)
+    assert h.quantile(0.0) == pytest.approx(float(vals.min()))
+    assert h.quantile(1.0) == pytest.approx(float(vals.max()))
+    assert h.count == 5000
+    assert h.sum == pytest.approx(float(vals.sum()))
+
+
+def test_histogram_poisoned_and_clamped_samples():
+    reg = MetricsRegistry()
+    h = reg.histogram("h")
+    h.observe(float("nan"))                  # ignored, never corrupts
+    assert h.count == 0
+    h.observe(-1.0)                          # clamps into the first bucket
+    h.observe(0.0)
+    assert h.count == 2
+    snap = h.snapshot_dict()
+    assert snap["min"] == -1.0 and snap["max"] == 0.0
+    assert snap["min"] <= snap["p50"] <= snap["p99"] <= snap["max"]
+
+
+def test_counter_monotone_and_kind_collision():
+    reg = MetricsRegistry()
+    c = reg.counter("n")
+    c.inc(3)
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    assert c.value == 3
+    with pytest.raises(TypeError):
+        reg.gauge("n")                       # a name is bound to one kind
+    assert reg.counter("n") is c
+
+
+def test_metrics_snapshots_monotone_under_concurrent_writers():
+    """The tentpole invariant: a snapshot is an atomic cut — counters never
+    go backwards across snapshots and quantiles stay ordered, while writer
+    threads hammer every instrument kind."""
+    reg = MetricsRegistry()
+    stop = threading.Event()
+    errors = []
+
+    def writer(k):
+        try:
+            c = reg.counter("w.count")
+            h = reg.histogram("w.ms")
+            g = reg.gauge("w.level")
+            i = 0
+            while not stop.is_set():
+                c.inc()
+                h.observe(float(i % 7) + 0.1)
+                g.set(i)
+                i += 1
+        except Exception as e:                # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=writer, args=(k,)) for k in range(3)]
+    for t in threads:
+        t.start()
+    snaps = [reg.snapshot() for _ in range(200)]
+    stop.set()
+    for t in threads:
+        t.join()
+    assert not errors
+    last_c = last_n = -1
+    for s in snaps:
+        c = s["counters"].get("w.count", 0)
+        assert c >= last_c
+        last_c = c
+        hs = s["histograms"].get("w.ms")
+        if hs is not None:
+            assert hs["count"] >= last_n
+            last_n = hs["count"]
+            if hs["count"]:
+                assert (hs["min"] <= hs["p50"] <= hs["p95"]
+                        <= hs["p99"] <= hs["max"])
+    final = reg.snapshot()
+    assert final["counters"]["w.count"] == final["histograms"]["w.ms"]["count"]
+
+
+# ---------------------------------------------------------------------------
+# injected cold-tier faults through the full store + server
+# ---------------------------------------------------------------------------
+def test_slow_cold_opens_breaker_then_degrades(tmp_path, vclock):
+    srv = _tiered(tmp_path, vclock)
+    _fill(srv, 24)                            # hot: 16..23, cold: 0..15
+    fault = FaultyCold(srv.store.cold, vclock, delay=0.5)
+    srv.store.cold = fault
+    # first cold burst pays the injected delay, is served correctly, and
+    # trips the breaker (0.5s read >> 0.05s deadline)
+    rows = np.asarray(srv.fetch_many([0, 1, 2, 3]))
+    assert np.any(rows != 0) and np.all(np.isfinite(rows))
+    assert srv.store.breaker.state == "open"
+    assert srv.store.breaker.n_opens == 1
+    assert srv.store.stats.n_degraded == 0
+    # while open, cold users degrade: zero rows, counted, and the cold
+    # store is NOT touched — virtual time proves there is no stall
+    t0, reads0 = vclock(), fault.n_reads
+    rows = np.asarray(srv.fetch_many([4, 5, 6, 7]))
+    assert vclock() == t0 and fault.n_reads == reads0
+    assert np.all(rows == 0)
+    assert srv.store.stats.n_degraded == 4
+    assert srv.stats.n_misses == 4            # explicit miss, never silent
+    for u in (4, 5, 6, 7):
+        assert srv.store.tier(u) == "cold"    # still cold, data intact
+    snap = srv.metrics.snapshot()
+    assert snap["counters"]["tier.degraded"] == 4
+    assert snap["counters"]["bse.misses"] == 4
+    assert snap["histograms"]["tier.cold_read_ms"]["count"] == 1
+    # the breaker is surfaced on health but an open circuit still serves:
+    # readiness holds
+    h = health_snapshot(srv)
+    assert h["live"] and h["ready"]
+    assert not h["checks"]["cold_breaker"]["ok"]
+    assert h["checks"]["cold_breaker"]["n_degraded"] == 4
+
+
+def test_breaker_half_open_probe_reopens_then_recovers(tmp_path, vclock):
+    eng = _engine()
+    srv = _tiered(tmp_path, vclock)
+    ref = BSEServer(_embed, None, eng, wire_dtype=jnp.float32, capacity=64)
+    rng = np.random.default_rng(0)
+    for lo in range(0, 24, 8):
+        us = list(range(lo, lo + 8))
+        items = rng.integers(0, N_ITEMS, (8, 9))
+        cats = rng.integers(0, N_CATS, (8, 9))
+        srv.ingest_histories(us, items, cats)
+        ref.ingest_histories(us, items, cats)
+    fault = FaultyCold(srv.store.cold, vclock, delay=0.5)
+    srv.store.cold = fault
+    srv.fetch_many([0])                       # slow read: opens
+    srv.fetch_many([1])                       # open: degrades
+    assert srv.store.stats.n_degraded == 1
+    # disk still sick at the first half-open probe: served slowly, re-opens
+    vclock.advance(1.0)
+    out = np.asarray(srv.fetch_many([1]))
+    assert srv.store.breaker.n_half_opens == 1
+    assert srv.store.breaker.state == "open"
+    assert srv.store.breaker.n_opens == 2
+    np.testing.assert_allclose(out, np.asarray(ref.fetch_many([1])),
+                               rtol=1e-6, atol=1e-6)
+    # disk recovers: the next probe is fast and closes the circuit; cold
+    # users promote and serve bit-identically to the unbounded reference
+    fault.delay = 0.0
+    vclock.advance(1.0)
+    out = np.asarray(srv.fetch_many([2]))
+    assert srv.store.breaker.state == "closed"
+    assert srv.store.breaker.n_closes == 1
+    np.testing.assert_allclose(out, np.asarray(ref.fetch_many([2])),
+                               rtol=1e-6, atol=1e-6)
+    assert health_snapshot(srv)["checks"]["cold_breaker"]["ok"]
+
+
+def test_failing_cold_degrades_reads_but_raises_on_writes(tmp_path, vclock):
+    srv = _tiered(tmp_path, vclock)
+    _fill(srv, 24)
+    srv.store.cold = FaultyCold(srv.store.cold, vclock, fail=True)
+    # READ path: the exception is absorbed into a counted degradation
+    rows = np.asarray(srv.fetch_many([0, 1]))
+    assert np.all(rows == 0)
+    assert srv.store.stats.n_degraded == 2
+    assert srv.store.breaker.state == "open"
+    assert srv.store.tier(0) == "cold"
+    # WRITE path (event fold needs the stored row): never degrades — a
+    # dropped write would silently lose behavior data
+    vclock.advance(10.0)                      # past reset: probe admitted
+    with pytest.raises(OSError):
+        srv.ingest_events([0], np.array([3]), np.array([1]))
+
+
+def test_fetch_p95_within_2x_hot_baseline_under_sick_cold_tier(tmp_path,
+                                                               vclock):
+    """The acceptance criterion: with a cold store whose reads exceed the
+    deadline 10x, steady-state ``fetch_many`` p95 stays within 2x the
+    hot-only baseline because the breaker converts cold reads into counted
+    degradations. Without the breaker the same access pattern pays the
+    full injected delay every burst."""
+    NOMINAL = 1e-3                            # modeled hot-path dispatch cost
+
+    def timed(bse, users):
+        t0 = vclock()
+        bse.fetch_many(users)
+        vclock.advance(NOMINAL)
+        return vclock() - t0
+
+    groups = [list(range(lo, lo + 8)) for lo in (0, 8, 16)]
+
+    base = _tiered(tmp_path / "base", vclock)     # working set fits hot
+    _fill(base, 8)
+    base_lat = [timed(base, groups[0]) for _ in range(50)]
+
+    sick = _tiered(tmp_path / "sick", vclock)
+    _fill(sick, 24)
+    sick.store.cold = FaultyCold(sick.store.cold, vclock, delay=0.5)
+    sick_lat = [timed(sick, groups[i % 3]) for i in range(50)]
+
+    p95_base = float(np.percentile(base_lat, 95))
+    p95_sick = float(np.percentile(sick_lat, 95))
+    assert p95_sick <= 2 * p95_base + 1e-9
+    assert sick.store.stats.n_degraded > 0
+    snap = sick.metrics.snapshot()
+    assert snap["counters"]["tier.degraded"] == sick.store.stats.n_degraded
+    # no stall: the whole 50-burst run costs one slow read + nominal time,
+    # and no silent miss — every degraded user surfaced as a counted miss
+    assert sum(sick_lat) < 1.0
+    assert sick.stats.n_misses >= sick.store.stats.n_degraded
+
+    # contrast: breakerless control pays the sick disk on every burst
+    ctl = BSEServer(_embed, None, _engine(), wire_dtype=jnp.float32,
+                    hot_capacity=8, warm_capacity=0,
+                    store_dir=str(tmp_path / "ctl" / "cold"), clock=vclock)
+    _fill(ctl, 24)
+    ctl.store.cold = FaultyCold(ctl.store.cold, vclock, delay=0.5)
+    ctl_lat = [timed(ctl, groups[i % 3]) for i in range(6)]
+    assert float(np.percentile(ctl_lat, 95)) > 2 * p95_base
+
+
+# ---------------------------------------------------------------------------
+# overload: admission through the CTR server
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=None)
+def _ctr_fixture():
+    dcfg = SyntheticCTRConfig(hist_len=32, n_items=200, n_cats=20)
+    cfg = CTRConfig(arch="din", n_items=200, n_cats=20, long_len=32,
+                    short_len=8, mlp_hidden=(16,),
+                    interest=InterestConfig(kind="sdim", m=8, tau=2))
+    model = CTRModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params, dcfg
+
+
+def _requests(dcfg, users, C=4, seed=0):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for u in users:
+        r = generate_batch(dcfg, 1, 100 + u)
+        ub = {k: jnp.asarray(v) for k, v in r.items() if k.startswith("hist")}
+        reqs.append((u, ub,
+                     jnp.asarray(rng.integers(0, 200, C).astype(np.int32)),
+                     jnp.asarray(rng.integers(0, 20, C).astype(np.int32)),
+                     jnp.zeros((C, 4))))
+    return reqs
+
+
+def test_rate_limited_burst_sheds_tail_as_explicit_nones(vclock):
+    model, params, dcfg = _ctr_fixture()
+    srv = CTRServer.build(model, params, rate_limit=1.0, rate_burst=4,
+                          clock=vclock)
+    reqs = _requests(dcfg, range(8))
+    out = srv.handle_requests(reqs)
+    assert len(out) == 8                      # shed != shorter list
+    assert all(s is not None for s in out[:4])
+    assert all(s is None for s in out[4:])    # the over-budget tail
+    assert srv.stats.n_requests == 4 and srv.stats.n_shed == 4
+    a = srv.admission.stats
+    assert a.n_offered == 8 == a.n_admitted + a.n_shed
+    snap = srv.metrics.snapshot()
+    assert snap["counters"]["ctr.shed"] == 4
+    assert snap["counters"]["ctr.requests"] == 4
+    assert snap["histograms"]["ctr.request_ms"]["count"] == 1
+    # bucket exhausted: the next burst sheds whole...
+    assert srv.handle_requests(reqs[:3]) == [None, None, None]
+    # ...and refills with (virtual) time at the configured rate
+    vclock.advance(2.0)
+    out = srv.handle_requests(reqs[:3])
+    assert sum(s is not None for s in out) == 2
+    assert health_snapshot(srv)["checks"]["admission"]["ok"]
+
+
+def test_concurrency_bound_sheds_whole_burst(vclock):
+    model, params, dcfg = _ctr_fixture()
+    srv = CTRServer.build(model, params, max_concurrency=1, clock=vclock)
+    reqs = _requests(dcfg, range(3))
+    assert srv.admission.enter()              # occupy the only slot
+    out = srv.handle_requests(reqs)
+    assert out == [None, None, None]
+    assert srv.stats.n_shed == 3
+    assert srv.admission.stats.n_shed_concurrency == 3
+    srv.admission.exit()
+    out = srv.handle_requests(reqs)           # slot free again: served
+    assert all(s is not None for s in out)
+    assert srv.stats.n_requests == 3
+    # empty bursts never touch the ledger
+    assert srv.handle_requests([]) == []
+    assert srv.admission.stats.n_offered == 6
+
+
+def test_bursty_overload_generator_conserves_every_request(vclock):
+    """Seeded open-loop burst generator: bursty arrivals against a
+    rate-limited server. Conservation — every offered request comes back
+    as exactly one score-or-``None``, and the server + admission ledgers
+    agree with the caller's own count."""
+    model, params, dcfg = _ctr_fixture()
+    srv = CTRServer.build(model, params, rate_limit=2.0, rate_burst=3,
+                          clock=vclock)
+    pool = _requests(dcfg, range(6))
+    rng = np.random.default_rng(7)
+    offered = served = shed = 0
+    for _ in range(12):
+        n = int(rng.integers(0, 5))
+        burst = [pool[int(i)] for i in rng.integers(0, len(pool), n)]
+        vclock.advance(float(rng.random()))   # bursty inter-arrival gaps
+        out = srv.handle_requests(burst)
+        assert len(out) == n
+        offered += n
+        served += sum(s is not None for s in out)
+        shed += sum(s is None for s in out)
+    assert offered == served + shed
+    assert srv.stats.n_requests == served
+    assert srv.stats.n_shed == shed
+    a = srv.admission.stats
+    assert a.n_offered == offered
+    assert a.n_admitted == served
+    assert a.n_shed == shed
+    assert srv.metrics.snapshot()["counters"].get("ctr.shed", 0) == shed
+
+
+# ---------------------------------------------------------------------------
+# health surface: writer-loop and queue faults
+# ---------------------------------------------------------------------------
+def test_health_dead_writer_with_queued_work_flips_liveness():
+    srv = BSEServer(_embed, None, _engine(), wire_dtype=jnp.float32,
+                    async_ingest=True, queue_depth=8)
+    rt = srv.async_ingest
+    h = health_snapshot(srv)
+    assert h["live"] and h["ready"]           # unstarted runtime: inline-driven
+    rt.submit_event(0, 1, 2)
+    # injected dead writer: thread object reports not-alive with work queued
+    rt._thread = types.SimpleNamespace(is_alive=lambda: False)
+    h = health_snapshot(srv)
+    assert not h["live"] and not h["ready"]
+    assert h["checks"]["writer"] == {"ok": False, "started": True,
+                                     "alive": False}
+    # a dead writer with an EMPTY queue is a clean stop, not a fault
+    rt._thread = None
+    rt.flush()
+    assert health_snapshot(srv)["live"]
+
+
+def test_health_full_queue_unready_drops_counted():
+    srv = BSEServer(_embed, None, _engine(), wire_dtype=jnp.float32,
+                    async_ingest=True, queue_depth=4)
+    rt = srv.async_ingest
+    accepted = sum(rt.submit_event(0, i, 0) for i in range(6))
+    assert accepted == 4 and rt.stats.n_dropped == 2
+    h = health_snapshot(srv)
+    assert h["live"] and not h["ready"]       # full queue: drops imminent
+    assert not h["checks"]["ingest_queue"]["ok"]
+    assert h["checks"]["drops"] == {"ok": True, "n_dropped": 2,
+                                    "n_deduped": 0}
+    assert srv.metrics.snapshot()["counters"]["ingest.dropped"] == 2
+    rt.flush()
+    h = health_snapshot(srv)
+    assert h["ready"]
+    assert h["checks"]["staleness"]["ok"]
+
+
+# ---------------------------------------------------------------------------
+# bench_check schema 2: the SLO section is CI-gated
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=None)
+def _bench_check():
+    import importlib.util
+    import os
+    path = os.path.join(os.path.dirname(__file__), "..", "tools",
+                        "bench_check.py")
+    spec = importlib.util.spec_from_file_location("bench_check", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _minimal_bench(schema=2):
+    var = {"users_per_sec": 100.0, "p50_ms": 1.0, "p95_ms": 2.0,
+           "p99_ms": 3.0}
+    bench = {
+        "schema": schema,
+        "backends": {"xla": {
+            "n_users": 8, "speedup_fused_vs_two_dispatch": 1.5,
+            **{v: dict(var)
+               for v in ("two_dispatch", "fused", "fused_int8")}}},
+        "quantization": {"table_bytes_fp32": 4096, "table_bytes_int8": 1088,
+                         "bytes_ratio": 3.76, "auc_fp32_unfused": 0.7,
+                         "auc_int8_fused": 0.7, "auc_gap": 0.0},
+        "roofline": {"bytes_per_user": 4096.0},
+        "hit_rate": {"xla": 0.9},
+        "ingest": {"n_users": 8, "n_bursts": 4,
+                   "read_only": {"p50_ms": 1.0, "p95_ms": 2.0},
+                   "under_ingest": {"p50_ms": 1.0, "p95_ms": 2.0},
+                   "p95_ratio": 1.0, "events_per_sec": 100.0,
+                   "events_submitted": 10, "events_folded": 9,
+                   "n_dropped": 1, "staleness_p95": 1.0,
+                   "max_queue_depth": 4},
+    }
+    if schema >= 2:
+        bench["slo"] = {"n_requests": 100, "offered_rps": 50.0,
+                        "p50_ms": 1.0, "p95_ms": 2.0, "p99_ms": 3.0,
+                        "shed_rate": 0.1, "degrade_rate": 0.0}
+    return bench
+
+
+def test_bench_check_schema2_requires_slo_and_reads_schema1():
+    bc = _bench_check()
+    assert any(ln.startswith("slo:") for ln in bc.check(_minimal_bench(2)))
+    # back-compat: a schema-1 file (pre-SLO) still validates, without slo
+    assert not any(ln.startswith("slo:")
+                   for ln in bc.check(_minimal_bench(1)))
+    bad = _minimal_bench(2)
+    del bad["slo"]
+    with pytest.raises(bc.Malformed, match="slo"):
+        bc.check(bad)
+    with pytest.raises(bc.Malformed, match="schema"):
+        bc.check({**_minimal_bench(2), "schema": 3})
+
+
+@pytest.mark.parametrize("mutate", [
+    lambda s: s.pop("p95_ms"),                       # missing percentile
+    lambda s: s.update(p50_ms=5.0),                  # unordered percentiles
+    lambda s: s.update(shed_rate=1.5),               # rate not a probability
+    lambda s: s.update(degrade_rate=-0.1),
+    lambda s: s.update(n_requests=0),
+    lambda s: s.update(p99_ms=float("nan")),
+])
+def test_bench_check_rejects_malformed_slo(mutate):
+    bc = _bench_check()
+    bench = _minimal_bench(2)
+    mutate(bench["slo"])
+    with pytest.raises(bc.Malformed):
+        bc.check(bench)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweeps: conservation under random overload schedules
+# ---------------------------------------------------------------------------
+@settings(max_examples=50, deadline=None, derandomize=True)
+@given(bursts=st.lists(st.tuples(st.integers(0, 12), st.booleans()),
+                       min_size=1, max_size=40),
+       rate=st.integers(1, 8), burst_cap=st.integers(1, 8),
+       max_conc=st.integers(1, 3))
+def test_admission_ledger_conservation_sweep(bursts, rate, burst_cap,
+                                             max_conc):
+    clk = VirtualClock()
+    adm = AdmissionController(max_concurrency=max_conc, rate=float(rate),
+                              burst=float(burst_cap), clock=clk)
+    served = 0
+    for n, tick in bursts:
+        if tick:
+            clk.advance(0.37)
+        assert adm.enter()                    # single-threaded: slot free
+        try:
+            k = adm.admit(n)
+            assert 0 <= k <= n
+            served += k
+        finally:
+            adm.exit()
+    s = adm.stats
+    assert s.n_offered == sum(n for n, _ in bursts)
+    assert s.n_offered == s.n_admitted + s.n_shed
+    assert s.n_admitted == served
+    assert adm.inflight == 0
+
+
+_OPS = st.lists(
+    st.one_of(st.tuples(st.just("ev"), st.integers(0, 5)),
+              st.tuples(st.just("hist"), st.integers(0, 5)),
+              st.tuples(st.just("touch"), st.integers(0, 5)),
+              st.tuples(st.just("drain"), st.just(0))),
+    min_size=1, max_size=60)
+
+
+@pytest.mark.slow
+@settings(max_examples=12, deadline=None, derandomize=True)
+@given(backend=st.sampled_from(BACKENDS), ops=_OPS,
+       seed=st.integers(0, 2 ** 16 - 1))
+def test_ingest_conservation_under_random_overload(backend, ops, seed):
+    """submitted == enqueued + dropped, and after a flush every enqueued
+    entry is folded or deduped — across random interleavings of events,
+    histories, touches, drains and backpressure, on both engine backends."""
+    srv = BSEServer(_embed, None, _engine(backend), wire_dtype=jnp.float32,
+                    async_ingest=True, queue_depth=6, max_staleness=3,
+                    drain_batch=4)
+    rt = srv.async_ingest
+    rng = np.random.default_rng(seed)
+    attempts = 0
+    for kind, u in ops:
+        before = rt.stats.n_enqueued + rt.stats.n_dropped
+        if kind == "ev":
+            rt.submit_event(u, int(rng.integers(N_ITEMS)),
+                            int(rng.integers(N_CATS)))
+        elif kind == "hist":
+            rt.submit_history(u, rng.integers(0, N_ITEMS, 8),
+                              rng.integers(0, N_CATS, 8))
+        elif kind == "touch":
+            rt.submit_touch(u)
+        else:
+            rt.drain_once()
+            continue
+        delta = rt.stats.n_enqueued + rt.stats.n_dropped - before
+        # every submit lands in exactly one ledger column; the only no-op
+        # is a touch merged with one already pending (reported True)
+        assert delta == 1 or (delta == 0 and kind == "touch")
+        attempts += delta
+    assert rt.stats.n_enqueued + rt.stats.n_dropped == attempts
+    rt.flush()
+    folded = (rt.stats.n_events_folded + rt.stats.n_histories_folded
+              + rt.stats.n_touches_folded)
+    assert rt.stats.n_enqueued == folded + rt.stats.n_deduped
+    assert len(rt._q) == 0
+    assert rt.stats.staleness_max() <= rt.max_staleness

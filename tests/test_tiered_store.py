@@ -240,6 +240,41 @@ def test_tiered_evict_and_clear(tmp_path):
     assert srv.store.tier(0) == "hot"
 
 
+def test_queued_touch_racing_eviction_does_not_resurrect(tmp_path):
+    """ISSUE 8: under async ingestion a read miss of a cold user enqueues
+    a promotion touch; if the user is EVICTED before the writer folds the
+    touch, the fold must be a no-op — the dead row must not be promoted
+    back into the hot tier (resurrection would serve deleted state)."""
+    srv = BSEServer(_embed, None, _engine("xla"), wire_dtype=jnp.float32,
+                    hot_capacity=4, warm_capacity=0,
+                    store_dir=os.path.join(str(tmp_path), "cold"),
+                    async_ingest=True)
+    rt = srv.async_ingest
+    rng = np.random.default_rng(3)
+    for lo in (0, 4):
+        srv.ingest_histories(list(range(lo, lo + 4)),
+                             rng.integers(0, N_ITEMS, (4, 9)),
+                             rng.integers(0, N_CATS, (4, 9)))
+    rt.flush()
+    cold_u = next(u for u in range(8) if srv.store.tier(u) == "cold")
+    # committed-view read misses the cold user and queues its promotion
+    assert np.all(np.asarray(srv.fetch_many([cold_u])) == 0)
+    assert rt.stats.n_enqueued > 8           # the touch really is queued
+    # the eviction races ahead of the queued touch
+    assert srv.evict(cold_u)
+    assert srv.store.tier(cold_u) is None
+    rt.flush()                               # fold the stale touch
+    assert rt.stats.n_touches_folded == 1
+    assert srv.store.tier(cold_u) is None    # NOT resurrected, in no tier
+    assert cold_u not in srv.store.hot
+    assert np.all(np.asarray(srv.fetch_many([cold_u])) == 0)
+    # a live cold user's touch still promotes normally through the queue
+    other = next(u for u in range(8) if srv.store.tier(u) == "cold")
+    srv.fetch_many([other])
+    rt.flush()
+    assert srv.store.tier(other) == "hot"
+
+
 # ---------------------------------------------------------------------------
 # snapshot -> restore
 # ---------------------------------------------------------------------------

@@ -7,7 +7,9 @@ ordered latency percentiles, the quantization block must carry the
 bytes-ratio and AUC-parity measurements, tier hit-rates must be
 probabilities, and the ingest block must report both latency phases with
 an accounted event balance (folded + dropped covers submitted — no event
-goes silently missing). Thresholds (1.5x speedup, 3.5x bytes, 1e-3 AUC
+goes silently missing). Schema 2 additionally requires the ``slo`` section
+(open-loop Zipf+Poisson tail latency with shed/degrade rates, ISSUE 8);
+schema 1 files remain readable for back-compat with older checkouts. Thresholds (1.5x speedup, 3.5x bytes, 1e-3 AUC
 gap, 1.2x under-ingest p95) are
 PR-acceptance numbers measured on dedicated hardware — this check pins the
 *schema* so a silently-skipped section can't pass CI, without making CI
@@ -47,9 +49,12 @@ def _num(d: dict, key: str, lo: float = None, hi: float = None,
 
 def check(bench: dict) -> list[str]:
     """Validate the parsed benchmark dict; returns human-readable summary
-    lines (raises Malformed on any structural problem)."""
-    if bench.get("schema") != 1:
-        raise Malformed(f"schema: expected 1, got {bench.get('schema')!r}")
+    lines (raises Malformed on any structural problem). Schema 1 files
+    (pre-SLO, ISSUE 7) stay readable; schema 2 adds the mandatory ``slo``
+    section (open-loop tail latency + shed/degrade rates, ISSUE 8)."""
+    schema = bench.get("schema")
+    if schema not in (1, 2):
+        raise Malformed(f"schema: expected 1 or 2, got {schema!r}")
     lines = []
 
     backends = bench.get("backends")
@@ -129,6 +134,23 @@ def check(bench: dict) -> list[str]:
                  f"({eps:.0f} events/s folded, "
                  f"{int(dropped)} dropped, "
                  f"staleness p95 {ing['staleness_p95']})")
+
+    if schema >= 2:
+        slo = bench.get("slo")
+        if not isinstance(slo, dict):
+            raise Malformed("slo: schema 2 requires the SLO section "
+                            "(open-loop tail latency under overload)")
+        where = "slo"
+        _num(slo, "n_requests", lo=1, where=where)
+        _num(slo, "offered_rps", lo=1e-9, where=where)
+        p = [_num(slo, k, lo=0, where=where) for k in PCTS]
+        if not p[0] <= p[1] <= p[2]:
+            raise Malformed(f"{where}: percentiles not ordered {p}")
+        shed = _num(slo, "shed_rate", lo=0.0, hi=1.0, where=where)
+        degr = _num(slo, "degrade_rate", lo=0.0, hi=1.0, where=where)
+        lines.append(f"slo: p50/p95/p99 {p[0]}/{p[1]}/{p[2]}ms at "
+                     f"{slo['offered_rps']:.0f} rps offered "
+                     f"(shed {shed:.1%}, degraded {degr:.1%})")
     return lines
 
 
