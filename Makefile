@@ -13,22 +13,29 @@
 # production serving runtime (tests/test_runtime_faults.py: circuit
 # breaker, admission shed, metrics monotonicity — deterministic, seeded,
 # virtual-clocked, no wall sleeps); it gates `test-fast` so a broken
-# degrade/shed path fails before the full suite runs. `docs-check`
+# degrade/shed path fails before the full suite runs. `test-trace` does
+# the same for the observability surface (tests/test_tracing.py span
+# trees, retention and Chrome export + tests/test_export.py Prometheus
+# round-trip). `docs-check`
 # verifies intra-repo doc links + kernel docstrings; it rides in the
 # default test-fast / ci paths.
 PYTHONPATH := src
 
-.PHONY: test test-fast test-faults test-full bench-smoke bench-check docs-check ci
+.PHONY: test test-fast test-faults test-trace test-full bench-smoke bench-check docs-check ci
 
 test:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
 
-test-fast: docs-check test-faults
+test-fast: docs-check test-faults test-trace
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q -m "not slow"
 
 test-faults:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q -m "not slow" \
 		tests/test_runtime_faults.py
+
+test-trace:
+	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q -m "not slow" \
+		tests/test_tracing.py tests/test_export.py
 
 test-full:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -q

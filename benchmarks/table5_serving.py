@@ -61,12 +61,20 @@ p50/p95/p99 tail latency plus the shed and degrade rates into
 if the section is missing), pinning the §4.4 latency-guarantee story:
 under overload the server sheds explicitly and degrades cold reads to
 counted misses — it never stalls and never drops silently.
+
+The **trace** section (schema 3) replays a small tiered workload with the
+request tracer (``serve/tracing.py``) enabled and records the span-coverage
+fraction and jit-compile span count into ``bench['trace']``. Every run is
+also stamped with ``git_rev`` and appended as one summary line to
+``results/bench_history.jsonl`` — ``tools/bench_trend.py`` prints the
+per-commit p95 / users-per-sec trajectory from that history.
 """
 from __future__ import annotations
 
 import json
 import os
 import shutil
+import subprocess
 import tempfile
 import time
 
@@ -81,11 +89,11 @@ from repro.serve.ctr_server import CTRServer
 
 
 def run(quick: bool = True):
-    bench = {"schema": 2, "quick": bool(quick),
+    bench = {"schema": 3, "quick": bool(quick),
              "generated_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ",
                                             time.gmtime()),
              "backends": {}, "quantization": {}, "roofline": {},
-             "hit_rate": {}, "ingest": {}, "slo": {}}
+             "hit_rate": {}, "ingest": {}, "slo": {}, "trace": {}}
     T = 2000
     B = 256 if quick else 1024
     n_req = 5 if quick else 20
@@ -140,6 +148,7 @@ def run(quick: bool = True):
     rows.extend(ingest_rows(quick, bench))
     rows.extend(pressure_rows(quick, bench))
     rows.extend(slo_rows(quick, bench))
+    rows.extend(trace_rows(quick, bench))
     _write_bench_json(bench)
     return rows
 
@@ -466,11 +475,63 @@ def auc_parity_rows(quick: bool = True, bench: dict = None) -> list[dict]:
                         f"_(bound_1e-3)_steps={steps}_eval={n_eval}"}]
 
 
+def _git_rev() -> str:
+    """Short commit hash of the checkout the benchmark ran in, or
+    ``"unknown"`` outside a git repo / without a git binary."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10)
+        rev = out.stdout.strip()
+        if out.returncode == 0 and rev:
+            return rev
+    except Exception:
+        pass
+    return "unknown"
+
+
+def _append_bench_history(bench: dict, root: str) -> str:
+    """Append a one-line summary of this run to
+    ``results/bench_history.jsonl`` — the per-commit trajectory that
+    ``tools/bench_trend.py`` renders. Append-only: each benchmark run adds
+    one record; the full ``BENCH_serving.json`` keeps only the latest."""
+    slo = bench.get("slo") or {}
+    trace = bench.get("trace") or {}
+    fused = {}
+    for backend, d in (bench.get("backends") or {}).items():
+        ups = (d.get("fused") or {}).get("users_per_sec") \
+            if isinstance(d, dict) else None
+        if ups is not None:
+            fused[backend] = ups
+    rec = {
+        "git_rev": bench.get("git_rev", "unknown"),
+        "generated_utc": bench.get("generated_utc"),
+        "schema": bench.get("schema"),
+        "quick": bench.get("quick"),
+        "slo_p50_ms": slo.get("p50_ms"),
+        "slo_p95_ms": slo.get("p95_ms"),
+        "slo_p99_ms": slo.get("p99_ms"),
+        "shed_rate": slo.get("shed_rate"),
+        "fused_users_per_sec": fused,
+        "span_coverage": trace.get("span_coverage"),
+        "n_compile_spans": trace.get("n_compile_spans"),
+    }
+    hist_dir = os.path.join(root, "results")
+    os.makedirs(hist_dir, exist_ok=True)
+    path = os.path.join(hist_dir, "bench_history.jsonl")
+    with open(path, "a") as f:
+        f.write(json.dumps(rec, sort_keys=True) + "\n")
+    return path
+
+
 def _write_bench_json(bench: dict) -> str:
     """Atomically write ``BENCH_serving.json`` at the repo root (schema
-    validated by ``tools/bench_check.py``)."""
-    path = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
-                                        "BENCH_serving.json"))
+    validated by ``tools/bench_check.py``), stamped with the current git
+    revision, and append this run's summary to the benchmark history."""
+    root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+    bench.setdefault("git_rev", _git_rev())
+    path = os.path.join(root, "BENCH_serving.json")
     tmp = f"{path}.tmp-{os.getpid()}"
     with open(tmp, "w") as f:
         json.dump(bench, f, indent=2, sort_keys=True)
@@ -478,6 +539,7 @@ def _write_bench_json(bench: dict) -> str:
         f.flush()
         os.fsync(f.fileno())
     os.replace(tmp, path)
+    _append_bench_history(bench, root)
     return path
 
 
@@ -894,4 +956,82 @@ def slo_rows(quick: bool = True, bench: dict = None) -> list[dict]:
          "derived": f"offered={offered_rps:.0f}rps_limit={rate_limit:.0f}rps"
                     f"_shed={shed_rate:.1%}_degraded={degrade_rate:.1%}"
                     f"_conserved={offered}=={st.n_requests}+{shed}"},
+    ]
+
+
+def trace_rows(quick: bool = True, bench: dict = None) -> list[dict]:
+    """Span coverage of the traced request path (schema 3): replay a small
+    admission-controlled tiered-store workload with the request tracer
+    (``serve/tracing.py``) enabled, then report what fraction of retained
+    root-span wall time is accounted for by instrumented child stages
+    (admission / assemble / fetch / score / tier movement) plus the number
+    of explicit jit-compile spans detected via the scorer's cache size.
+    Runs on its OWN small server so the slo section above stays untraced —
+    its p50/p95/p99 remain directly comparable across PRs; the
+    disabled-tracer overhead bound is pinned by tests/test_tracing.py.
+    Writes ``bench['trace']`` (required at schema 3 by
+    ``tools/bench_check.py``)."""
+    from repro.serve.tracing import Tracer
+
+    dcfg = SyntheticCTRConfig(hist_len=32, n_items=200, n_cats=20)
+    cfg = CTRConfig(arch="din", n_items=200, n_cats=20, long_len=32,
+                    short_len=8, mlp_hidden=(16,),
+                    interest=InterestConfig(kind="sdim", m=8, tau=2,
+                                            backend="xla"))
+    model = CTRModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    N = 48                        # working set spills past the hot tier
+    H = 16
+    CAND = 16
+    n_bursts = 20 if quick else 80
+    tracer = Tracer(slow_ms=None)   # reservoir keeps this whole small run
+    tmp = tempfile.mkdtemp(prefix="bse-trace-")
+    try:
+        server = CTRServer.build(
+            model, params, "decoupled", wire_dtype=jnp.float32,
+            hot_capacity=H, warm_capacity=0, store_dir=tmp,
+            cold_deadline_s=0.05, rate_limit=400.0, rate_burst=8.0,
+            max_concurrency=4, tracer=tracer)
+        rng = np.random.default_rng(0)
+        raw = generate_batch(dcfg, 1, 0)
+        ub = {k: jnp.asarray(v) for k, v in raw.items()
+              if k.startswith("hist")}
+        hist_i = rng.integers(0, 200, (N, 32))
+        hist_c = rng.integers(0, 20, (N, 32))
+        for lo in range(0, N, H):
+            server.bse.ingest_histories(list(range(lo, lo + H)),
+                                        hist_i[lo:lo + H],
+                                        hist_c[lo:lo + H])
+        p = 1.0 / (np.arange(1, N + 1) ** 1.1)
+        p /= p.sum()
+        for _ in range(n_bursts):
+            us = rng.choice(N, size=4, p=p)
+            reqs = [(int(u), ub,
+                     jnp.asarray(rng.integers(0, 200, CAND)
+                                 .astype(np.int32)),
+                     jnp.asarray(rng.integers(0, 20, CAND)
+                                 .astype(np.int32)),
+                     jnp.zeros((CAND, 4))) for u in us]
+            server.handle_requests(reqs)
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    s = tracer.summary()
+    if bench is not None:
+        bench["trace"] = {
+            "span_coverage": round(s["span_coverage"], 4),
+            "n_compile_spans": int(s["n_compile_spans"]),
+            "n_traces": int(s["n_traces"]),
+            "n_spans": int(s["n_spans"]),
+            "n_retained_tail": int(s["n_retained_tail"]),
+            "n_retained_sampled": int(s["n_retained_sampled"]),
+            "n_dropped": int(s["n_dropped"]),
+            "n_bursts": int(n_bursts),
+        }
+    return [
+        {"name": "table5/trace/span_coverage", "us_per_call": 0.0,
+         "shards": 1,
+         "derived": f"coverage={s['span_coverage']:.1%}"
+                    f"_over_{s['n_finished']}_traces"
+                    f"_{s['n_spans']}_spans"
+                    f"_compile_spans={s['n_compile_spans']}"},
     ]

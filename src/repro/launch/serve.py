@@ -26,6 +26,14 @@ cold reads slower than D open the circuit and later cold reads degrade to
 counted misses instead of stalling the request path. The run ends with a
 liveness/readiness snapshot (serve/health.py) and a metrics summary
 (serve/metrics.py) — the same surfaces a production sidecar would scrape.
+
+``--trace`` threads a span tracer (serve/tracing.py) through the whole
+request path — admission, assembly, BSE fetch, tier movement, scoring
+dispatch (jit compiles shown explicitly) and the async-ingest fold — and
+ends the run with the slowest-5 trace breakdown. ``--trace-dir D`` also
+writes Perfetto-loadable Chrome trace-event JSON to ``D/trace.json``;
+``--trace-slow-ms T`` always retains traces slower than T ms (shed/
+degraded/force-drained requests are always retained regardless).
 """
 from __future__ import annotations
 
@@ -145,6 +153,17 @@ def main():
                         "slower than this open the circuit and later cold "
                         "reads degrade to counted misses instead of "
                         "stalling (needs the tiered store)")
+    p.add_argument("--trace", action="store_true",
+                   help="per-request span tracing (serve/tracing.py): "
+                        "prints the slowest-5 trace breakdown at end of "
+                        "run")
+    p.add_argument("--trace-dir", default=None,
+                   help="write Chrome trace-event JSON (Perfetto-loadable) "
+                        "to this directory as trace.json (implies --trace)")
+    p.add_argument("--trace-slow-ms", type=float, default=None,
+                   help="always retain traces with root latency >= this "
+                        "(ms); flagged traces (shed/degraded/forced-drain) "
+                        "are always retained regardless (implies --trace)")
     p.add_argument("--tokens", type=int, default=32, help="LM decode steps")
     p.add_argument("--sdim-kv", action="store_true",
                    help="LM: SDIM bucket-compressed KV decode")
@@ -212,6 +231,14 @@ def main():
         p.error(f"--rate-limit/--max-concurrency/--cold-deadline-ms harden "
                 f"the CTR request path (recsys serving only); arch "
                 f"{args.arch!r} is family {mod.FAMILY!r}")
+    if args.trace_slow_ms is not None and args.trace_slow_ms < 0:
+        p.error(f"--trace-slow-ms must be >= 0, got {args.trace_slow_ms}")
+    tracing = (args.trace or args.trace_dir is not None
+               or args.trace_slow_ms is not None)
+    if mod.FAMILY != "recsys" and tracing:
+        p.error(f"--trace/--trace-dir/--trace-slow-ms trace the CTR request "
+                f"path (recsys serving only); arch {args.arch!r} is family "
+                f"{mod.FAMILY!r}")
     # NOTE: --micro-batch may exceed --hot-capacity: BSEServer auto-chunks
     # oversized bursts into hot-capacity-sized sub-bursts (extra dispatches,
     # same scores), so no launcher-level rejection is needed
@@ -247,6 +274,10 @@ def main():
                     f"{args.arch!r} serves {mode!r}")
         mesh_ctx = (build_mesh(args.shards, args.mesh, err=p.error)
                     if mode == "decoupled" else None)
+        tracer = None
+        if tracing:
+            from repro.serve.tracing import Tracer
+            tracer = Tracer(slow_ms=args.trace_slow_ms)
         server = CTRServer.build(model, params, mode, mesh=mesh_ctx,
                                  hot_capacity=args.hot_capacity,
                                  store_dir=args.store_dir, policy=args.policy,
@@ -261,7 +292,8 @@ def main():
                                  rate_burst=args.rate_burst,
                                  cold_deadline_s=(
                                      None if args.cold_deadline_ms is None
-                                     else args.cold_deadline_ms / 1e3))
+                                     else args.cold_deadline_ms / 1e3),
+                                 tracer=tracer)
         bse = server.bse
         if args.async_ingest:
             bse.async_ingest.start()
@@ -312,14 +344,11 @@ def main():
                     flush()
                 continue
             else:
-                req = (f"u{r}", user, ci, cc,
-                       jnp.zeros((args.candidates, cfg.ctx_dim)))
-                if server.admission is not None:
-                    # admission wraps the burst path only: route singles
-                    # through it as 1-bursts so --rate-limit still applies
-                    scores = server.handle_requests([req])[0]
-                else:
-                    scores = server.handle_request(*req)
+                # handle_request is a 1-burst through the batch path:
+                # admission, metrics and tracing apply uniformly
+                scores = server.handle_request(
+                    f"u{r}", user, ci, cc,
+                    jnp.zeros((args.candidates, cfg.ctx_dim)))
             report(r, scores)
         if pending:
             flush()
@@ -369,6 +398,15 @@ def main():
             if snap["counters"]:
                 print("counters: " + ", ".join(
                     f"{k}={v}" for k, v in sorted(snap["counters"].items())))
+        if tracer is not None:
+            print(tracer.report(5))
+            if args.trace_dir is not None:
+                import os
+                os.makedirs(args.trace_dir, exist_ok=True)
+                out = tracer.save_chrome_trace(
+                    os.path.join(args.trace_dir, "trace.json"))
+                print(f"chrome trace written to {out} "
+                      f"(load in Perfetto / chrome://tracing)")
     elif mod.FAMILY == "lm":
         from repro.models.lm import LMModel
 

@@ -81,6 +81,7 @@ import numpy as np
 from repro.core.engine import SDIMEngine
 from repro.serve.metrics import MetricsRegistry, observe_ms
 from repro.serve.table_store import ShardedTableStore, TableStore
+from repro.serve.tracing import NOOP_SPAN, Tracer
 from repro.serve.tiered_store import (TieredTableStore, _atomic_json,
                                       _atomic_npz, burst_cap, burst_chunks,
                                       is_tiered)
@@ -235,13 +236,15 @@ class BSEFetcher:
 
     def __init__(self, engine: SDIMEngine, R: jax.Array, store: Any,
                  wire_dtype: Any, stats: BSEStats,
-                 metrics: Optional[MetricsRegistry] = None):
+                 metrics: Optional[MetricsRegistry] = None,
+                 tracer: Optional[Tracer] = None):
         self.engine = engine
         self.R = R
         self.store = store
         self.wire_dtype = jnp.dtype(wire_dtype)
         self.stats = stats
         self.metrics = metrics
+        self.tracer = tracer
         self._async = None      # AsyncIngestor once attached
 
     def attach(self, runtime) -> None:
@@ -291,35 +294,44 @@ class BSEFetcher:
         tiered store, warm/cold users are batch-promoted and hit — with the
         burst auto-chunked when it touches more distinct users than the hot
         tier holds. Bytes are accounted for the array actually returned."""
-        t0 = time.perf_counter()
-        view = self._view()
-        if view is not None:
-            slots, present = view.lookup(users)
-            rows = view.rows(slots)
-            self._touch_misses(users, present)
-        else:
-            cap = burst_cap(self.store)
-            if cap is not None:
-                chunks = burst_chunks(list(users), cap)
-                if len(chunks) > 1:
-                    # chunked: each sub-burst observes its own dispatch
-                    return jnp.concatenate(
-                        [self.fetch_many(users[lo:hi]) for lo, hi in chunks])
-            slots, present = self.store.lookup(users)
-            rows = self.store.rows(slots)
-        misses = len(users) - int(present.sum())
-        if misses:
-            rows = rows * jnp.asarray(present, rows.dtype)[:, None, None, None]
-        wire = rows.astype(self.wire_dtype)
-        self.stats.n_fetches += len(users)
-        self.stats.n_misses += misses
-        self.stats.bytes_transmitted += wire.size * self.wire_dtype.itemsize
-        if self.metrics is not None:
-            observe_ms(self.metrics, "bse.fetch_many_ms",
-                       time.perf_counter() - t0)
-            self.metrics.counter("bse.fetches").inc(len(users))
-            self.metrics.counter("bse.misses").inc(misses)
-        return wire
+        tr = self.tracer
+        sp = (tr.span("bse.fetch_many", n=len(users))
+              if tr is not None and tr.enabled else NOOP_SPAN)
+        with sp:
+            t0 = time.perf_counter()
+            view = self._view()
+            if view is not None:
+                slots, present = view.lookup(users)
+                rows = view.rows(slots)
+                self._touch_misses(users, present)
+            else:
+                cap = burst_cap(self.store)
+                if cap is not None:
+                    chunks = burst_chunks(list(users), cap)
+                    if len(chunks) > 1:
+                        # chunked: each sub-burst observes its own dispatch
+                        # (and its own child span)
+                        return jnp.concatenate(
+                            [self.fetch_many(users[lo:hi])
+                             for lo, hi in chunks])
+                slots, present = self.store.lookup(users)
+                rows = self.store.rows(slots)
+            misses = len(users) - int(present.sum())
+            if misses:
+                rows = rows * jnp.asarray(present,
+                                          rows.dtype)[:, None, None, None]
+            wire = rows.astype(self.wire_dtype)
+            self.stats.n_fetches += len(users)
+            self.stats.n_misses += misses
+            self.stats.bytes_transmitted += \
+                wire.size * self.wire_dtype.itemsize
+            sp.set(misses=misses)
+            if self.metrics is not None:
+                observe_ms(self.metrics, "bse.fetch_many_ms",
+                           time.perf_counter() - t0)
+                self.metrics.counter("bse.fetches").inc(len(users))
+                self.metrics.counter("bse.misses").inc(misses)
+            return wire
 
     def serve_candidates(self, users: Sequence[Any], q: jax.Array,
                          R: Optional[jax.Array] = None) -> jax.Array:
@@ -333,41 +345,48 @@ class BSEFetcher:
         under async ingestion). What crosses to the CTR server is the
         (B, C, d) interest array in the wire dtype — C·d floats per user
         instead of G·U·d."""
-        t0 = time.perf_counter()
-        view = self._view()
-        if view is not None:
-            slots, present = view.lookup(users)
-            data, scales = view.data, view.scales
-            self._touch_misses(users, present)
-        else:
-            cap = burst_cap(self.store)
-            if cap is not None:
-                chunks = burst_chunks(list(users), cap)
-                if len(chunks) > 1:
-                    return jnp.concatenate(
-                        [self.serve_candidates(users[lo:hi], q[lo:hi], R=R)
-                         for lo, hi in chunks])
-            slots, present = self.store.lookup(users)
-            data, scales = self.store.data, self.store.scales
-        if self.store.sharded:
-            out = self.engine.serve_fused_sharded(
-                data, slots, q, present=present, scales=scales,
-                R=self.R if R is None else R, mesh=self.store.mesh_ctx)
-        else:
-            out = self.engine.serve_fused(
-                data, slots, q, present=present, scales=scales,
-                R=self.R if R is None else R)
-        wire = out.astype(self.wire_dtype)
-        misses = len(users) - int(present.sum())
-        self.stats.n_fetches += len(users)
-        self.stats.n_misses += misses
-        self.stats.bytes_transmitted += wire.size * self.wire_dtype.itemsize
-        if self.metrics is not None:
-            observe_ms(self.metrics, "bse.serve_candidates_ms",
-                       time.perf_counter() - t0)
-            self.metrics.counter("bse.fetches").inc(len(users))
-            self.metrics.counter("bse.misses").inc(misses)
-        return wire
+        tr = self.tracer
+        sp = (tr.span("bse.serve_candidates", n=len(users))
+              if tr is not None and tr.enabled else NOOP_SPAN)
+        with sp:
+            t0 = time.perf_counter()
+            view = self._view()
+            if view is not None:
+                slots, present = view.lookup(users)
+                data, scales = view.data, view.scales
+                self._touch_misses(users, present)
+            else:
+                cap = burst_cap(self.store)
+                if cap is not None:
+                    chunks = burst_chunks(list(users), cap)
+                    if len(chunks) > 1:
+                        return jnp.concatenate(
+                            [self.serve_candidates(users[lo:hi], q[lo:hi],
+                                                   R=R)
+                             for lo, hi in chunks])
+                slots, present = self.store.lookup(users)
+                data, scales = self.store.data, self.store.scales
+            if self.store.sharded:
+                out = self.engine.serve_fused_sharded(
+                    data, slots, q, present=present, scales=scales,
+                    R=self.R if R is None else R, mesh=self.store.mesh_ctx)
+            else:
+                out = self.engine.serve_fused(
+                    data, slots, q, present=present, scales=scales,
+                    R=self.R if R is None else R)
+            wire = out.astype(self.wire_dtype)
+            misses = len(users) - int(present.sum())
+            self.stats.n_fetches += len(users)
+            self.stats.n_misses += misses
+            self.stats.bytes_transmitted += \
+                wire.size * self.wire_dtype.itemsize
+            sp.set(misses=misses)
+            if self.metrics is not None:
+                observe_ms(self.metrics, "bse.serve_candidates_ms",
+                           time.perf_counter() - t0)
+                self.metrics.counter("bse.fetches").inc(len(users))
+                self.metrics.counter("bse.misses").inc(misses)
+            return wire
 
 
 class BSEServer:
@@ -391,6 +410,7 @@ class BSEServer:
         max_staleness: int = 64,
         drain_batch: int = 256,
         metrics: Optional[MetricsRegistry] = None,
+        tracer: Optional[Tracer] = None,
         cold_deadline_s: Optional[float] = None,
         clock: Optional[Callable[[], float]] = None,
     ):
@@ -424,7 +444,10 @@ class BSEServer:
 
         ``metrics`` is the shared ``MetricsRegistry`` (one is created when
         not given): every layer reports per-path latency histograms and
-        counters into it. ``cold_deadline_s`` arms the tiered store's
+        counters into it. ``tracer`` (serve/tracing.py) adds per-request
+        spans on the read path, tier movement, and — riding each queue
+        entry — the async fold that commits a submit.
+        ``cold_deadline_s`` arms the tiered store's
         cold-tier circuit breaker (degrade-to-miss, see
         serve/tiered_store.py); ``clock`` injects a virtual clock for
         deterministic fault tests."""
@@ -432,6 +455,7 @@ class BSEServer:
         self.R = engine.R if R is None else R
         self.wire_dtype = jnp.dtype(wire_dtype)
         self.metrics = MetricsRegistry() if metrics is None else metrics
+        self.tracer = tracer
         cfg = engine.cfg
         tiered = is_tiered(hot_capacity, store_dir, policy, warm_capacity)
         if cold_deadline_s is not None and not tiered and store is None:
@@ -448,6 +472,7 @@ class BSEServer:
             # server's observability/runtime config
             if isinstance(store, TieredTableStore):
                 store.metrics = self.metrics
+                store.tracer = tracer
                 if clock is not None:
                     store._clock = clock
                 if cold_deadline_s is not None and store.breaker is None:
@@ -461,7 +486,7 @@ class BSEServer:
                 mesh=mesh, policy=policy or "clock", store_dir=store_dir,
                 warm_capacity=warm_capacity, dtype=table_dtype,
                 cold_deadline_s=cold_deadline_s, clock=clock,
-                metrics=self.metrics)
+                metrics=self.metrics, tracer=tracer)
         elif mesh is None:
             self.store = TableStore(cfg.n_groups, cfg.n_buckets, cfg.d,
                                     capacity=capacity, dtype=table_dtype)
@@ -476,14 +501,14 @@ class BSEServer:
                                     metrics=self.metrics)
         self.fetcher = BSEFetcher(engine, self.R, self.store,
                                   self.wire_dtype, self.stats,
-                                  metrics=self.metrics)
+                                  metrics=self.metrics, tracer=tracer)
         self.async_ingest = None
         if async_ingest:
             from repro.serve.ingest import AsyncIngestor
             self.async_ingest = AsyncIngestor(
                 self.ingestor, self.store, queue_depth=queue_depth,
                 max_staleness=max_staleness, drain_batch=drain_batch,
-                metrics=self.metrics)
+                metrics=self.metrics, tracer=tracer)
             self.fetcher.attach(self.async_ingest)
 
     # the params/embed snapshot lives on the write half; expose it here so

@@ -41,6 +41,7 @@ from repro.models.ctr import CTRModel
 from repro.serve.admission import AdmissionController
 from repro.serve.bse_server import BSEServer
 from repro.serve.metrics import MetricsRegistry, observe_ms
+from repro.serve.tracing import NOOP_SPAN, Tracer
 
 
 @dataclasses.dataclass
@@ -70,6 +71,7 @@ class CTRServer:
               rate_burst: float = None,
               cold_deadline_s: float = None,
               metrics: MetricsRegistry = None,
+              tracer: Tracer = None,
               clock=None) -> "CTRServer":
         """Mesh-aware construction of the whole serving pair: wires the
         model's behavior-embedding fn and checkpointed hash family ``R``
@@ -104,7 +106,10 @@ class CTRServer:
         sheds. ``cold_deadline_s`` arms the tiered store's cold-tier
         circuit breaker (degrade-to-miss instead of stalling on a slow
         disk). ``metrics`` is the shared registry (created when omitted)
-        every layer reports into; ``clock`` injects a virtual clock for
+        every layer reports into; ``tracer`` (serve/tracing.py) threads
+        per-request spans through every layer of the pair — admission,
+        assembly, BSE fetch, tier movement, scoring dispatch and the
+        async-ingest fold; ``clock`` injects a virtual clock for
         deterministic fault tests."""
         from repro.serve.tiered_store import is_tiered
 
@@ -146,6 +151,7 @@ class CTRServer:
                             queue_depth=queue_depth,
                             max_staleness=max_staleness,
                             metrics=metrics,
+                            tracer=tracer,
                             cold_deadline_s=cold_deadline_s,
                             clock=clock)
         admission = None
@@ -156,13 +162,14 @@ class CTRServer:
                 burst=rate_burst,
                 clock=_time.monotonic if clock is None else clock)
         return cls(model, params, bse, mode=mode, fused=fused,
-                   admission=admission, metrics=metrics)
+                   admission=admission, metrics=metrics, tracer=tracer)
 
     def __init__(self, model: CTRModel, params: Any,
                  bse_server: Optional[BSEServer] = None,
                  mode: str = "decoupled", fused: bool = False,
                  admission: Optional[AdmissionController] = None,
-                 metrics: Optional[MetricsRegistry] = None):
+                 metrics: Optional[MetricsRegistry] = None,
+                 tracer: Optional[Tracer] = None):
         assert mode in ("decoupled", "inline", "target_attention")
         if mode == "decoupled":
             assert bse_server is not None
@@ -174,6 +181,7 @@ class CTRServer:
         self.admission = admission
         self.metrics = metrics if metrics is not None else (
             bse_server.metrics if bse_server is not None else None)
+        self.tracer = tracer
         self.stats = ServeStats()
         self._score_table = jax.jit(
             lambda p, u, ci, cc, ctx, tb: model.score_candidates(
@@ -193,37 +201,16 @@ class CTRServer:
             lambda p, ci, cc: model._embed_behaviors(p, ci, cc))
 
     def handle_request(self, user: Any, user_batch: dict,
-                       cand_items, cand_cats, ctx) -> jax.Array:
-        """user_batch: hist_* (1, L) arrays (only used by non-decoupled modes)."""
-        t0 = time.perf_counter()
-        if self.mode == "decoupled":
-            tf0 = time.perf_counter()
-            table = self.bse.fetch(user)
-            if table is None:
-                self.bse.ingest_history(
-                    user, np.asarray(user_batch["hist_items"][0]),
-                    np.asarray(user_batch["hist_cats"][0]),
-                    np.asarray(user_batch["hist_mask"][0]),
-                )
-                table = self.bse.fetch(user)
-            if table is None:
-                # async ingestion: the encode was queued, not folded —
-                # serve zero long-term interest until the next commit
-                table = jnp.zeros(self.bse.store.row_shape,
-                                  self.bse.wire_dtype)
-            self.stats.fetch_time_s += time.perf_counter() - tf0
-            scores = self._score_table(self.params, user_batch, cand_items,
-                                       cand_cats, ctx, table[None])
-        else:
-            scores = self._score_raw(self.params, user_batch, cand_items, cand_cats, ctx)
-        scores.block_until_ready()
-        dt = time.perf_counter() - t0
-        self.stats.total_time_s += dt
-        self.stats.n_requests += 1
-        if self.metrics is not None:
-            observe_ms(self.metrics, "ctr.request_ms", dt)
-            self.metrics.counter("ctr.requests").inc(1)
-        return scores
+                       cand_items, cand_cats, ctx):
+        """Single-request serving: a burst of ONE through the exact
+        ``handle_requests`` path — same admission accounting, same timing,
+        same spans — so singular and batched metrics/traces agree
+        (``score_candidates`` is the B=1 case of ``score_candidates_many``,
+        so scores are unchanged). ``user_batch``: hist_* (1, L) arrays.
+        Returns the (C,) scores, or ``None`` when admission shed the
+        request."""
+        return self.handle_requests(
+            [(user, user_batch, cand_items, cand_cats, ctx)])[0]
 
     def handle_requests(self, requests) -> list:
         """Micro-batched serving: ``requests`` is a list of ``(user,
@@ -248,28 +235,66 @@ class CTRServer:
         ``len(requests)`` entries, degradation is never silent."""
         if not requests:
             return []
-        adm = self.admission
-        if adm is None:
-            return self._handle_admitted(requests)
-        if not adm.enter():
-            self._note_shed(len(requests))
-            adm.shed_all(len(requests))
-            return [None] * len(requests)
-        try:
-            k = adm.admit(len(requests))
-            if k < len(requests):
-                self._note_shed(len(requests) - k)
-            out = self._handle_admitted(requests[:k]) if k else []
-            return out + [None] * (len(requests) - k)
-        finally:
-            adm.exit()
+        tr = self.tracer
+        if tr is not None and tr.enabled:
+            root = tr.span("ctr.request", n=len(requests))
+        else:
+            root, tr = NOOP_SPAN, None
+        with root:
+            adm = self.admission
+            if adm is None:
+                return self._handle_admitted(requests)
+            with (tr.span("ctr.admission") if tr is not None
+                  else NOOP_SPAN) as asp:
+                entered = adm.enter()
+                k = adm.admit(len(requests)) if entered else 0
+                asp.set(offered=len(requests), admitted=k)
+            if not entered:
+                self._note_shed(len(requests))
+                adm.shed_all(len(requests))
+                if tr is not None:
+                    tr.flag("shed")
+                return [None] * len(requests)
+            try:
+                if k < len(requests):
+                    self._note_shed(len(requests) - k)
+                    if tr is not None:
+                        tr.flag("shed")
+                out = self._handle_admitted(requests[:k]) if k else []
+                return out + [None] * (len(requests) - k)
+            finally:
+                adm.exit()
 
     def _note_shed(self, n: int) -> None:
         self.stats.n_shed += n
         if self.metrics is not None:
             self.metrics.counter("ctr.shed").inc(n)
 
+    def _dispatch(self, fn, *args):
+        """Jitted scoring dispatch, synchronized. When tracing, a dispatch
+        that GREW the jit cache is recorded as an explicit
+        ``ctr.jit_compile`` span (and ``ctr.jit_compiles`` counter) so
+        compile stalls are attributed instead of polluting serve tails."""
+        tr = self.tracer
+        if tr is None or not tr.enabled:
+            scores = fn(*args)
+            scores.block_until_ready()
+            return scores
+        size = getattr(fn, "_cache_size", None)
+        before = size() if size is not None else -1
+        with tr.span("ctr.score") as sp:
+            scores = fn(*args)
+            scores.block_until_ready()
+            if size is not None and size() > before:
+                sp.name = "ctr.jit_compile"
+                if self.metrics is not None:
+                    self.metrics.counter("ctr.jit_compiles").inc()
+        return scores
+
     def _handle_admitted(self, requests) -> list:
+        tr = self.tracer
+        if tr is not None and not tr.enabled:
+            tr = None
         t0 = time.perf_counter()
         users = [r[0] for r in requests]
         n_cands = [len(r[2]) for r in requests]
@@ -283,16 +308,18 @@ class CTRServer:
         # device op per request. Decoupled scoring reads only the recent
         # short_len window (the long branch reads the fetched tables), so
         # don't ship (B, L) histories it will never touch.
-        lo = -self.model.cfg.short_len if self.mode == "decoupled" else 0
-        ci = jnp.asarray(np.stack([pad_c(r[2], c)
-                                   for r, c in zip(requests, n_cands)]))
-        cc = jnp.asarray(np.stack([pad_c(r[3], c)
-                                   for r, c in zip(requests, n_cands)]))
-        ctx = jnp.asarray(np.stack([pad_c(r[4], c)
-                                    for r, c in zip(requests, n_cands)]))
-        hist = {k: jnp.asarray(np.concatenate(
-                    [np.asarray(r[1][k])[:, lo:] for r in requests]))
-                for k in ("hist_items", "hist_cats", "hist_mask")}
+        with (tr.span("ctr.assemble", n=len(requests), c_max=c_max)
+              if tr is not None else NOOP_SPAN):
+            lo = -self.model.cfg.short_len if self.mode == "decoupled" else 0
+            ci = jnp.asarray(np.stack([pad_c(r[2], c)
+                                       for r, c in zip(requests, n_cands)]))
+            cc = jnp.asarray(np.stack([pad_c(r[3], c)
+                                       for r, c in zip(requests, n_cands)]))
+            ctx = jnp.asarray(np.stack([pad_c(r[4], c)
+                                        for r, c in zip(requests, n_cands)]))
+            hist = {k: jnp.asarray(np.concatenate(
+                        [np.asarray(r[1][k])[:, lo:] for r in requests]))
+                    for k in ("hist_items", "hist_cats", "hist_mask")}
 
         if self.mode == "decoupled":
             tf0 = time.perf_counter()
@@ -301,15 +328,17 @@ class CTRServer:
                 if r[0] not in self.bse.tables:
                     missing.setdefault(r[0], r[1])
             if missing:
-                self.bse.ingest_histories(
-                    list(missing),
-                    np.concatenate([np.asarray(b["hist_items"])
-                                    for b in missing.values()]),
-                    np.concatenate([np.asarray(b["hist_cats"])
-                                    for b in missing.values()]),
-                    np.concatenate([np.asarray(b["hist_mask"])
-                                    for b in missing.values()]),
-                )
+                with (tr.span("ctr.ingest_missing", n=len(missing))
+                      if tr is not None else NOOP_SPAN):
+                    self.bse.ingest_histories(
+                        list(missing),
+                        np.concatenate([np.asarray(b["hist_items"])
+                                        for b in missing.values()]),
+                        np.concatenate([np.asarray(b["hist_cats"])
+                                        for b in missing.values()]),
+                        np.concatenate([np.asarray(b["hist_mask"])
+                                        for b in missing.values()]),
+                    )
             if self.fused:
                 # fused deployment: the megakernel gathers + dequantizes +
                 # queries in one dispatch on the BSE side; only (B, C, e)
@@ -317,21 +346,31 @@ class CTRServer:
                 target_e = self._embed_targets(self.params, ci, cc)
                 interest = self.bse.serve_candidates(users, target_e)
                 self.stats.fetch_time_s += time.perf_counter() - tf0
-                scores = self._score_many_interest(self.params, hist, ci, cc,
-                                                   ctx, interest)
+                scores = self._dispatch(self._score_many_interest,
+                                        self.params, hist, ci, cc,
+                                        ctx, interest)
             else:
                 tables = self.bse.fetch_many(users)
                 self.stats.fetch_time_s += time.perf_counter() - tf0
-                scores = self._score_many_table(self.params, hist, ci, cc,
-                                                ctx, tables)
+                scores = self._dispatch(self._score_many_table,
+                                        self.params, hist, ci, cc,
+                                        ctx, tables)
         else:
-            scores = self._score_many_raw(self.params, hist, ci, cc, ctx)
-        scores.block_until_ready()
+            scores = self._dispatch(self._score_many_raw,
+                                    self.params, hist, ci, cc, ctx)
         dt = time.perf_counter() - t0
         self.stats.total_time_s += dt
         self.stats.n_requests += len(requests)
+        trace_id = None
+        if tr is not None:
+            cur = tr.current()
+            trace_id = cur.trace_id if cur is not None else None
+            # the recorded latency rides the trace too, so a histogram
+            # exemplar resolves to a trace that can vouch for its bucket
+            tr.annotate(request_ms=1e3 * dt)
         if self.metrics is not None:
-            observe_ms(self.metrics, "ctr.request_ms", dt)
+            observe_ms(self.metrics, "ctr.request_ms", dt,
+                       exemplar=trace_id)
             self.metrics.counter("ctr.requests").inc(len(requests))
         # one device->host transfer, then per-request views (slicing the
         # device array would issue one tiny device op per request)

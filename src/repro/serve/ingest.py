@@ -62,8 +62,10 @@ from repro.serve.quant import dequantize_rows
 from repro.serve.table_store import _gather_dequant
 from repro.serve.tiered_store import (TieredTableStore, burst_cap,
                                       burst_chunks)
+from repro.serve.tracing import NOOP_SPAN
 
 _EVENT, _HISTORY, _TOUCH = 0, 1, 2
+_KIND_NAMES = ("event", "history", "touch")
 
 
 @dataclasses.dataclass
@@ -176,13 +178,17 @@ class AsyncIngestor:
     half) and a ``BSEFetcher`` (read half). See the module docstring for
     the contract. Built by ``BSEServer(async_ingest=True)``.
 
-    Queue entries (drained strictly in order):
-      ``(_EVENT, user, item, cat)`` — one behavior event;
-      ``(_HISTORY, user, items, cats, mask)`` — full re-encode; subsumes
-      (removes + counts as deduped) everything still queued for the user,
-      since the fold overwrites the whole row — latest history wins;
-      ``(_TOUCH, user)`` — tiered-store promotion request from a read miss
-      (deduped the same way; carries no staleness).
+    Queue entries (drained strictly in order; every entry CARRIES its
+    submitter's trace context + enqueue time as the final two fields, so
+    the fold lands in the submitting request's trace — see
+    serve/tracing.py):
+      ``(_EVENT, user, item, cat, ctx, t_enq)`` — one behavior event;
+      ``(_HISTORY, user, items, cats, mask, ctx, t_enq)`` — full
+      re-encode; subsumes (removes + counts as deduped) everything still
+      queued for the user, since the fold overwrites the whole row —
+      latest history wins;
+      ``(_TOUCH, user, ctx, t_enq)`` — tiered-store promotion request
+      from a read miss (deduped the same way; carries no staleness).
 
     The writer loop (``start``/``stop``) is optional — tests and
     single-threaded callers drive ``drain_once``/``flush`` directly.
@@ -190,7 +196,7 @@ class AsyncIngestor:
 
     def __init__(self, ingestor: Any, store: Any, queue_depth: int = 1024,
                  max_staleness: int = 64, drain_batch: int = 256,
-                 metrics: Any = None):
+                 metrics: Any = None, tracer: Any = None):
         if queue_depth < 1:
             raise ValueError(f"queue_depth must be >= 1, got {queue_depth}")
         if max_staleness < 1:
@@ -205,6 +211,7 @@ class AsyncIngestor:
         self.drain_batch = drain_batch
         self.stats = IngestStats()
         self.metrics = metrics          # optional MetricsRegistry
+        self.tracer = tracer            # optional Tracer
         # double-buffer safety: no device buffer a CommittedView may still
         # reference is ever donated (writes copy instead)
         ingestor.donate = False
@@ -244,25 +251,46 @@ class AsyncIngestor:
         if self.metrics is not None:
             self.metrics.counter("ingest.dropped").inc()
 
+    def _trace_ctx(self):
+        """(SpanContext, enqueue time) to ride the queue entry — the
+        submitter's innermost open span, so the eventual fold appears in
+        the submitting request's trace. (None, 0.0) when not tracing."""
+        tr = self.tracer
+        if tr is None or not tr.enabled:
+            return None, 0.0
+        ctx = tr.current()
+        if ctx is None:
+            return None, 0.0
+        return ctx, tr.clock()
+
     def _bound_staleness(self, user: Any) -> None:
         if self._pending.get(user, 0) < self.max_staleness:
             return
         self.stats.n_forced_drains += 1
-        while self._pending.get(user, 0) >= self.max_staleness:
-            if self.drain_once() == 0:      # pragma: no cover — safety net
-                break
+        tr = self.tracer
+        sp = NOOP_SPAN
+        if tr is not None and tr.enabled:
+            # the submit folded inline — anomalous enough to always keep
+            tr.flag("forced_drain")
+            sp = tr.span("ingest.forced_drain", user=str(user))
+        with sp:
+            while self._pending.get(user, 0) >= self.max_staleness:
+                if self.drain_once() == 0:  # pragma: no cover — safety net
+                    break
 
     def submit_event(self, user: Any, item: int, cat: int) -> bool:
         """Enqueue one behavior event. ``False`` = queue full, event
         dropped (counted in ``stats.n_dropped``) — never blocks a reader,
         never raises."""
         self._bound_staleness(user)
+        ctx, t_enq = self._trace_ctx()
         with self._qlock:
             if len(self._q) >= self.queue_depth:
                 self._note_drop()
                 accepted = False
             else:
-                self._q.append((_EVENT, user, int(item), int(cat)))
+                self._q.append((_EVENT, user, int(item), int(cat),
+                                ctx, t_enq))
                 if self._oldest is None:
                     self._oldest = time.perf_counter()
                 self._pending[user] = self._pending.get(user, 0) + 1
@@ -279,6 +307,7 @@ class AsyncIngestor:
         in ``stats.n_deduped``; synchronous ingestion would have clobbered
         them the same way. Latest history wins, matching sync order."""
         self._bound_staleness(user)
+        ctx, t_enq = self._trace_ctx()
         with self._qlock:
             if user in self._hist_pending or user in self._touch_pending \
                     or self._pending.get(user, 0):
@@ -301,7 +330,8 @@ class AsyncIngestor:
                 return False
             self._q.append((_HISTORY, user, np.asarray(items),
                             np.asarray(cats),
-                            None if mask is None else np.asarray(mask)))
+                            None if mask is None else np.asarray(mask),
+                            ctx, t_enq))
             if self._oldest is None:
                 self._oldest = time.perf_counter()
             self._hist_pending.add(user)
@@ -315,13 +345,14 @@ class AsyncIngestor:
         """Promotion request from a read miss (tiered stores): the writer
         loop pulls the user hot off the request path. Deduped per user; no
         staleness accounting (nothing new to fold)."""
+        ctx, t_enq = self._trace_ctx()
         with self._qlock:
             if user in self._touch_pending:
                 return True
             if len(self._q) >= self.queue_depth:
                 self._note_drop()
                 return False
-            self._q.append((_TOUCH, user))
+            self._q.append((_TOUCH, user, ctx, t_enq))
             if self._oldest is None:
                 self._oldest = time.perf_counter()
             self._touch_pending.add(user)
@@ -377,6 +408,10 @@ class AsyncIngestor:
                 self._oldest = None if not self._q else time.perf_counter()
             if not batch:
                 return 0
+            tr = self.tracer
+            if tr is not None and not tr.enabled:
+                tr = None
+            t_drain = tr.clock() if tr is not None else 0.0
             t0 = time.perf_counter()
             for kind, group in _segment(batch):
                 if kind == _EVENT:
@@ -403,6 +438,22 @@ class AsyncIngestor:
             if self.metrics is not None:
                 self.metrics.histogram("ingest.fold_ms").observe(1e3 * dt)
                 self.metrics.counter("ingest.folded").inc(n)
+            if tr is not None:
+                # land the async half in each submitter's trace: the
+                # time-in-queue span and the fold that committed it —
+                # submit → queue → fold → commit-version as one causally
+                # linked trace across the thread boundary
+                t_done = tr.clock()
+                version = self._version
+                for e in batch:
+                    ctx = e[-2]
+                    if ctx is None:
+                        continue
+                    tr.add_span(ctx, "ingest.queued", e[-1], t_drain,
+                                user=str(e[1]), kind=_KIND_NAMES[e[0]])
+                    tr.add_span(ctx, "ingest.fold", t_drain, t_done,
+                                user=str(e[1]), kind=_KIND_NAMES[e[0]],
+                                commit_version=version)
             return n
 
     def _fold_touches(self, users: Sequence[Any]) -> None:

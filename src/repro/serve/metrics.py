@@ -101,9 +101,18 @@ class Histogram:
     ``quantile(q)`` interpolates linearly inside the bucket covering the
     q-rank and clamps to the observed [min, max], so estimates are monotone
     in q and exact at the extremes. Negative/zero observations clamp into
-    the first bucket (latencies only)."""
+    the first bucket (latencies only).
 
-    __slots__ = ("_lock", "_buckets", "_count", "_sum", "_min", "_max")
+    **Exemplars** (ISSUE 9): ``observe(v, exemplar=trace_id)`` makes the
+    covering bucket remember the trace id of its LATEST observation, and
+    ``exemplar(q)`` reads back the exemplar of the bucket covering the
+    q-rank — so "what is p99?" upgrades to "show me a p99 request": the
+    returned id resolves against the ``Tracer``'s retained traces
+    (serve/tracing.py). Exemplar storage is lazily allocated — histograms
+    that never see one pay nothing."""
+
+    __slots__ = ("_lock", "_buckets", "_count", "_sum", "_min", "_max",
+                 "_exemplars")
 
     def __init__(self, lock: threading.Lock):
         self._lock = lock
@@ -112,8 +121,9 @@ class Histogram:
         self._sum = 0.0
         self._min = math.inf
         self._max = -math.inf
+        self._exemplars = None          # lazily [trace_id | None] per bucket
 
-    def observe(self, v: float) -> None:
+    def observe(self, v: float, exemplar=None) -> None:
         v = float(v)
         if math.isnan(v):
             return                      # poisoned sample; never corrupt stats
@@ -131,6 +141,36 @@ class Histogram:
             self._sum += v
             self._min = min(self._min, v)
             self._max = max(self._max, v)
+            if exemplar is not None:
+                if self._exemplars is None:
+                    self._exemplars = [None] * (len(_BOUNDS) + 1)
+                self._exemplars[lo] = exemplar
+
+    def exemplar(self, q: float):
+        """Trace id exemplifying quantile ``q``: the latest-observation
+        exemplar of the bucket covering the q-rank, falling back to the
+        nearest populated bucket below that has one. ``None`` when no
+        observation carried an exemplar."""
+        with self._lock:
+            if self._count == 0 or self._exemplars is None:
+                return None
+            if not 0.0 <= q <= 1.0:
+                raise ValueError(f"quantile must be in [0, 1], got {q}")
+            rank = q * self._count
+            cum = 0
+            cover = len(self._buckets) - 1
+            for i, n in enumerate(self._buckets):
+                cum += n
+                if n and cum >= rank:
+                    cover = i
+                    break
+            for i in range(cover, -1, -1):
+                if self._exemplars[i] is not None:
+                    return self._exemplars[i]
+            for i in range(cover + 1, len(self._exemplars)):
+                if self._exemplars[i] is not None:
+                    return self._exemplars[i]
+            return None                # pragma: no cover — guarded above
 
     @property
     def count(self) -> int:
@@ -237,10 +277,34 @@ class MetricsRegistry:
             return {"counters": counters, "gauges": gauges,
                     "histograms": hists}
 
+    def export_state(self) -> dict:
+        """Raw instrument state for exposition-format rendering
+        (serve/export.py): one atomic cut like ``snapshot()``, but
+        histograms keep their full per-bucket counts (copied) instead of
+        collapsing to interpolated quantiles — Prometheus wants the
+        buckets themselves. ``bounds`` is the shared upper-bound tuple;
+        ``buckets[i]`` counts observations ≤ ``bounds[i]`` (non-
+        cumulative; the last entry is the overflow bucket)."""
+        with self._lock:
+            counters, gauges, hists = {}, {}, {}
+            for name, inst in self._instruments.items():
+                if isinstance(inst, Counter):
+                    counters[name] = inst._v
+                elif isinstance(inst, Gauge):
+                    gauges[name] = inst._v
+                else:
+                    hists[name] = {"bounds": _BOUNDS,
+                                   "buckets": list(inst._buckets),
+                                   "count": inst._count,
+                                   "sum": inst._sum}
+            return {"counters": counters, "gauges": gauges,
+                    "histograms": hists}
+
 
 def observe_ms(metrics: Optional[MetricsRegistry], name: str,
-               seconds: float) -> None:
+               seconds: float, exemplar=None) -> None:
     """Guarded convenience: record ``seconds`` into histogram ``name`` in
-    milliseconds, or do nothing when no registry is attached."""
+    milliseconds (optionally carrying a trace-id exemplar), or do nothing
+    when no registry is attached."""
     if metrics is not None:
-        metrics.histogram(name).observe(1e3 * seconds)
+        metrics.histogram(name).observe(1e3 * seconds, exemplar=exemplar)

@@ -62,6 +62,7 @@ import numpy as np
 
 from repro.serve.admission import CircuitBreaker
 from repro.serve.metrics import observe_ms
+from repro.serve.tracing import maybe_span
 from repro.serve.table_store import ShardedTableStore, TableStore
 
 
@@ -556,7 +557,7 @@ class TieredTableStore:
                  warm_capacity: Optional[int] = None,
                  cold_deadline_s: Optional[float] = None,
                  breaker: Optional[CircuitBreaker] = None,
-                 clock=None, metrics=None):
+                 clock=None, metrics=None, tracer=None):
         """``cold_deadline_s`` arms a ``CircuitBreaker`` around the cold
         tier: a cold segment read slower than the deadline (or raising)
         opens the circuit, after which cold users on the READ path degrade
@@ -564,7 +565,11 @@ class TieredTableStore:
         request behind a sick disk; write-path promotions (``create=True``)
         always read — correctness over latency off the request path. Pass
         ``breaker`` to share/inject one, ``clock`` for a virtual clock
-        (tests), ``metrics`` to export tier counters + cold-read latency."""
+        (tests), ``metrics`` to export tier counters + cold-read latency,
+        ``tracer`` (serve/tracing.py) to emit ``tier.cold_read`` /
+        ``tier.promote`` / ``tier.demote`` spans on actual tier movement
+        (resident hits stay span-free) and flag degraded requests'
+        traces."""
         if hot_capacity < 1:
             raise ValueError(
                 f"hot_capacity must be >= 1, got {hot_capacity} — a tiered "
@@ -590,6 +595,7 @@ class TieredTableStore:
                                      clock=self._clock)
         self.breaker = breaker
         self.metrics = metrics
+        self.tracer = tracer
 
     # ------------------------------------------------------------------
     # delegated surface
@@ -727,47 +733,53 @@ class TieredTableStore:
         cold_parts = None
         if cold_u:
             t0 = self._clock()
-            try:
-                cold_parts = self.cold.load_remove(cold_u)
-            except Exception:
-                if self.breaker is None or create:
-                    raise
-                self.breaker.record_failure()
-                self._degrade(cold_u)
-                cold_u = []
-            else:
-                dt = self._clock() - t0
-                if self.breaker is not None:
-                    self.breaker.record(dt)
-                observe_ms(self.metrics, "tier.cold_read_ms", dt)
+            with maybe_span(self.tracer, "tier.cold_read", n=len(cold_u)):
+                try:
+                    cold_parts = self.cold.load_remove(cold_u)
+                except Exception:
+                    if self.breaker is None or create:
+                        raise
+                    self.breaker.record_failure()
+                    self._degrade(cold_u)
+                    cold_u = []
+                else:
+                    dt = self._clock() - t0
+                    if self.breaker is not None:
+                        self.breaker.record(dt)
+                    observe_ms(self.metrics, "tier.cold_read_ms", dt)
         promote = warm_u + cold_u
         if promote:
-            rparts, sparts = [], []
-            if warm_u:
-                r, s = self.warm.take(warm_u)
-                rparts.append(r)
-                sparts.append(s)
-            if cold_u:
-                rparts.append(cold_parts[0])
-                sparts.append(cold_parts[1])
-            rows = rparts[0] if len(rparts) == 1 else np.concatenate(rparts)
-            scales = None
-            if self.hot.quantized:
-                assert all(s is not None for s in sparts), \
-                    "quantized store promoted rows without scales"
-                scales = (sparts[0] if len(sparts) == 1
-                          else np.concatenate(sparts))
-            # ONE scatter promotes the whole batch; rows move as the stored
-            # payload bytes (write_raw), so no re-quantization on promotion
-            self.hot.write_raw(self.hot.assign(promote), jnp.asarray(rows),
-                               None if scales is None else jnp.asarray(scales))
-            self.stats.n_hot_scatters += 1
-            self.stats.warm_promotions += len(warm_u)
-            self.stats.cold_promotions += len(cold_u)
-            self.stats.promote_bytes += rows.nbytes + (
-                0 if scales is None else scales.nbytes)
-            if self.metrics is not None:
-                self.metrics.counter("tier.promotions").inc(len(promote))
+            with maybe_span(self.tracer, "tier.promote",
+                            n_warm=len(warm_u), n_cold=len(cold_u)):
+                rparts, sparts = [], []
+                if warm_u:
+                    r, s = self.warm.take(warm_u)
+                    rparts.append(r)
+                    sparts.append(s)
+                if cold_u:
+                    rparts.append(cold_parts[0])
+                    sparts.append(cold_parts[1])
+                rows = (rparts[0] if len(rparts) == 1
+                        else np.concatenate(rparts))
+                scales = None
+                if self.hot.quantized:
+                    assert all(s is not None for s in sparts), \
+                        "quantized store promoted rows without scales"
+                    scales = (sparts[0] if len(sparts) == 1
+                              else np.concatenate(sparts))
+                # ONE scatter promotes the whole batch; rows move as the
+                # stored payload bytes (write_raw), so no re-quantization
+                # on promotion
+                self.hot.write_raw(
+                    self.hot.assign(promote), jnp.asarray(rows),
+                    None if scales is None else jnp.asarray(scales))
+                self.stats.n_hot_scatters += 1
+                self.stats.warm_promotions += len(warm_u)
+                self.stats.cold_promotions += len(cold_u)
+                self.stats.promote_bytes += rows.nbytes + (
+                    0 if scales is None else scales.nbytes)
+                if self.metrics is not None:
+                    self.metrics.counter("tier.promotions").inc(len(promote))
         if new_u:
             self.hot.assign(new_u)     # fresh slots read zero; no device op
         for u in promote + new_u:
@@ -791,24 +803,31 @@ class TieredTableStore:
         self.stats.n_degraded += len(cold_users)
         if self.metrics is not None:
             self.metrics.counter("tier.degraded").inc(len(cold_users))
+        if self.tracer is not None and self.tracer.enabled:
+            # the enclosing request's trace is always retained: a degraded
+            # answer must stay debuggable after the fact
+            self.tracer.flag("degraded")
+            self.tracer.annotate(degraded=len(cold_users))
 
     def _demote(self, k: int, pinned: set) -> None:
-        victims = self.policy.victims(k, exclude=pinned)
-        # 1 gather — raw payload bytes (int8 moves ~4x fewer bytes off HBM)
-        payload, scales = self.hot.rows_raw(self.hot.slots(victims))
-        vrows = np.asarray(payload)
-        vscales = None if scales is None else np.asarray(scales)
-        self.stats.n_hot_gathers += 1
-        self.hot.evict_many(victims)                           # 1 zero-scatter
-        self.stats.n_hot_scatters += 1
-        for v in victims:
-            self.policy.remove(v)
-        self.warm.put(victims, vrows, vscales)
-        self.stats.demotions += k
-        self.stats.demote_bytes += vrows.nbytes + (
-            0 if vscales is None else vscales.nbytes)
-        if self.metrics is not None:
-            self.metrics.counter("tier.demotions").inc(k)
+        with maybe_span(self.tracer, "tier.demote", k=k):
+            victims = self.policy.victims(k, exclude=pinned)
+            # 1 gather — raw payload bytes (int8 moves ~4x fewer bytes off
+            # HBM)
+            payload, scales = self.hot.rows_raw(self.hot.slots(victims))
+            vrows = np.asarray(payload)
+            vscales = None if scales is None else np.asarray(scales)
+            self.stats.n_hot_gathers += 1
+            self.hot.evict_many(victims)                       # 1 zero-scatter
+            self.stats.n_hot_scatters += 1
+            for v in victims:
+                self.policy.remove(v)
+            self.warm.put(victims, vrows, vscales)
+            self.stats.demotions += k
+            self.stats.demote_bytes += vrows.nbytes + (
+                0 if vscales is None else vscales.nbytes)
+            if self.metrics is not None:
+                self.metrics.counter("tier.demotions").inc(k)
 
     def _spill_overflow(self) -> None:
         if self.warm_capacity is None or self.cold is None:

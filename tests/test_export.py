@@ -1,0 +1,118 @@
+"""Prometheus text-exposition tests (ISSUE 9; serve/export.py).
+
+The rendered page is parsed BACK line by line — every sample must match
+the exposition grammar, every ``# TYPE`` must precede its samples, and the
+parsed numbers must reproduce the registry's own state (counters exact,
+histogram ``+Inf`` cumulative count == observation count, ``_sum``
+consistent) — so a real Prometheus scraper would ingest exactly what the
+``MetricsRegistry`` holds.
+"""
+import re
+
+import jax.numpy as jnp
+import pytest
+
+from repro.serve.bse_server import BSEServer
+from repro.serve.export import render_prometheus
+from repro.serve.health import health_snapshot
+from repro.serve.metrics import MetricsRegistry, observe_ms
+from test_runtime_faults import _embed, _engine
+
+_SAMPLE = re.compile(
+    r'^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)'
+    r'(?:\{(?P<labels>[^}]*)\})?'
+    r' (?P<value>[^ ]+)$')
+_TYPE = re.compile(
+    r'^# TYPE (?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)'
+    r' (?P<kind>counter|gauge|histogram)$')
+
+
+def _parse(text):
+    """Exposition text -> (types, samples) or raises on a grammar break."""
+    types, samples = {}, []
+    for ln in text.strip().split("\n"):
+        m = _TYPE.match(ln)
+        if m:
+            types[m.group("name")] = m.group("kind")
+            continue
+        m = _SAMPLE.match(ln)
+        assert m, f"unparseable exposition line: {ln!r}"
+        samples.append((m.group("name"), m.group("labels"),
+                        float(m.group("value"))))
+    return types, samples
+
+
+def test_render_parses_back_and_matches_registry():
+    m = MetricsRegistry()
+    m.counter("ctr.requests").inc(7)
+    m.counter("ctr.shed").inc(2)
+    m.gauge("ingest.queue_depth").set(3)
+    for v in (0.5, 1.0, 2.0, 250.0):
+        observe_ms(m, "ctr.request_ms", v / 1e3)
+    text = render_prometheus(m)
+    types, samples = _parse(text)
+    by_name = {}
+    for name, labels, value in samples:
+        by_name.setdefault(name, []).append((labels, value))
+
+    # counters: exact values, declared as counters, dots sanitized away
+    assert types["repro_ctr_requests"] == "counter"
+    assert by_name["repro_ctr_requests"] == [(None, 7.0)]
+    assert by_name["repro_ctr_shed"] == [(None, 2.0)]
+    assert types["repro_ingest_queue_depth"] == "gauge"
+    assert by_name["repro_ingest_queue_depth"] == [(None, 3.0)]
+
+    # histogram: cumulative buckets ending in a mandatory +Inf == count
+    assert types["repro_ctr_request_ms"] == "histogram"
+    buckets = by_name["repro_ctr_request_ms_bucket"]
+    cums = [v for _, v in buckets]
+    assert cums == sorted(cums)               # cumulative => nondecreasing
+    assert buckets[-1][0] == 'le="+Inf"' and cums[-1] == 4.0
+    les = [float(lbl.split('"')[1]) for lbl, _ in buckets[:-1]]
+    assert les == sorted(les)                 # boundaries ascend
+    assert by_name["repro_ctr_request_ms_count"] == [(None, 4.0)]
+    (_, s) = by_name["repro_ctr_request_ms_sum"][0]
+    assert s == pytest.approx(253.5)
+
+    # every sample's base name was TYPE-declared before it appeared
+    declared = set(types)
+    for name, _, _ in samples:
+        base = re.sub(r"_(bucket|sum|count)$", "", name)
+        assert base in declared or name in declared
+
+    # no characters outside the Prometheus charset anywhere
+    for name, _, _ in samples:
+        assert re.fullmatch(r"[a-zA-Z_:][a-zA-Z0-9_:]*", name)
+
+
+def test_health_renders_as_gauges():
+    srv = BSEServer(_embed, None, _engine(), wire_dtype=jnp.float32,
+                    async_ingest=True, queue_depth=4)
+    h = health_snapshot(srv)
+    text = render_prometheus(srv.metrics, health=h)
+    types, samples = _parse(text)
+    by_name = {name: (labels, v) for name, labels, v in samples}
+    assert types["repro_health_live"] == "gauge"
+    assert by_name["repro_health_live"] == (None, 1.0)
+    assert by_name["repro_health_ready"] == (None, 1.0)
+    checks = [(labels, v) for name, labels, v in samples
+              if name == "repro_health_check_ok"]
+    assert checks and all(re.fullmatch(r'check="[a-zA-Z0-9_:]+"', lbl)
+                          for lbl, _ in checks)
+    rendered = {lbl.split('"')[1] for lbl, _ in checks}
+    assert rendered == set(h["checks"])
+    assert all(v == 1.0 for _, v in checks)   # healthy server: all ok
+
+
+def test_empty_registry_renders_empty_page():
+    assert render_prometheus(MetricsRegistry()) == "\n"
+
+
+def test_prefix_and_name_sanitization():
+    m = MetricsRegistry()
+    m.counter("9weird.metric-name!x").inc()
+    text = render_prometheus(m, prefix="svc")
+    types, samples = _parse(text)
+    (name,) = types
+    assert name == "svc__9weird_metric_name_x"
+    assert samples == [(name, None, 1.0)]

@@ -573,7 +573,7 @@ def test_health_full_queue_unready_drops_counted():
 
 
 # ---------------------------------------------------------------------------
-# bench_check schema 2: the SLO section is CI-gated
+# bench_check schemas 2/3: the SLO and trace sections are CI-gated
 # ---------------------------------------------------------------------------
 @functools.lru_cache(maxsize=None)
 def _bench_check():
@@ -613,6 +613,10 @@ def _minimal_bench(schema=2):
         bench["slo"] = {"n_requests": 100, "offered_rps": 50.0,
                         "p50_ms": 1.0, "p95_ms": 2.0, "p99_ms": 3.0,
                         "shed_rate": 0.1, "degrade_rate": 0.0}
+    if schema >= 3:
+        bench["git_rev"] = "abc1234"
+        bench["trace"] = {"span_coverage": 0.95, "n_compile_spans": 1,
+                          "n_traces": 10, "n_spans": 60}
     return bench
 
 
@@ -627,7 +631,27 @@ def test_bench_check_schema2_requires_slo_and_reads_schema1():
     with pytest.raises(bc.Malformed, match="slo"):
         bc.check(bad)
     with pytest.raises(bc.Malformed, match="schema"):
-        bc.check({**_minimal_bench(2), "schema": 3})
+        bc.check({**_minimal_bench(2), "schema": 4})
+
+
+def test_bench_check_schema3_requires_trace_and_git_rev():
+    bc = _bench_check()
+    assert any(ln.startswith("trace:") for ln in bc.check(_minimal_bench(3)))
+    # schema 2 stays readable with no trace section at all
+    assert not any(ln.startswith("trace:")
+                   for ln in bc.check(_minimal_bench(2)))
+    bad = _minimal_bench(3)
+    del bad["trace"]
+    with pytest.raises(bc.Malformed, match="trace"):
+        bc.check(bad)
+    bad = _minimal_bench(3)
+    del bad["git_rev"]
+    with pytest.raises(bc.Malformed, match="git_rev"):
+        bc.check(bad)
+    bad = _minimal_bench(3)
+    bad["trace"]["span_coverage"] = 1.5       # coverage is a fraction
+    with pytest.raises(bc.Malformed, match="span_coverage"):
+        bc.check(bad)
 
 
 @pytest.mark.parametrize("mutate", [

@@ -1,0 +1,378 @@
+"""End-to-end request-tracing suite (ISSUE 9; serve/tracing.py).
+
+Everything timing-related runs on the ``vclock`` fixture (tests/conftest)
+— span durations, queue-time across the async-ingest boundary, retention
+thresholds — so the span tree assertions are exact, not approximate. The
+only wall-clock test is the disabled-overhead bound, which compares
+medians of the SAME workload with tracing absent vs constructed-but-off.
+
+Covers the ISSUE-9 acceptance criteria directly:
+  * span-tree correctness (parent links, durations, attrs) on the
+    virtual clock;
+  * cross-thread / cross-ingest-boundary linkage: a ``submit_event``
+    inside a request span yields ``ingest.queued`` + ``ingest.fold``
+    spans in the SUBMITTING request's trace, parented to the span open at
+    submit time, carrying the committed store version and the exact
+    virtual time-in-queue;
+  * tail-based retention: every shed and every degraded request's trace
+    is retained even when the reservoir would have sampled it out;
+  * Chrome trace-event export is valid JSON with monotone ``ts`` per
+    ``tid`` (Perfetto-loadable);
+  * a p99 histogram exemplar resolves to a stored trace whose root span
+    agrees with the recorded latency;
+  * disabled tracing costs nothing measurable on ``handle_requests``.
+"""
+import json
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import VirtualClock
+from repro.serve.bse_server import BSEServer
+from repro.serve.ctr_server import CTRServer
+from repro.serve.metrics import MetricsRegistry
+from repro.serve.tracing import NOOP_SPAN, SpanContext, Tracer, maybe_span
+from test_runtime_faults import (FaultyCold, _ctr_fixture, _embed, _engine,
+                                 _fill, _requests, _tiered)
+
+
+# ---------------------------------------------------------------------------
+# span tree on the virtual clock
+# ---------------------------------------------------------------------------
+def test_span_tree_parent_links_and_durations(vclock):
+    tr = Tracer(clock=vclock)
+    with tr.span("root", n=2) as root:
+        vclock.advance(0.010)
+        with tr.span("child_a") as a:
+            vclock.advance(0.005)
+            a.set(rows=3)
+        with tr.span("child_b"):
+            vclock.advance(0.002)
+            with tr.span("grandchild"):
+                vclock.advance(0.001)
+        vclock.advance(0.004)
+    assert tr.n_traces == 1 and tr.n_spans == 4
+    (t,) = tr.finished()
+    assert [s.name for s in t.spans] == ["root", "child_a", "child_b",
+                                         "grandchild"]
+    rt = t.root
+    assert rt.parent_id is None and rt.attrs == {"n": 2}
+    kids = t.children_of(rt.span_id)
+    assert [s.name for s in kids] == ["child_a", "child_b"]
+    assert all(k.parent_id == rt.span_id for k in kids)
+    (gc,) = t.children_of(kids[1].span_id)
+    assert gc.name == "grandchild"
+    assert rt.duration_ms == pytest.approx(22.0)
+    assert kids[0].duration_ms == pytest.approx(5.0)
+    assert kids[0].attrs == {"rows": 3}
+    assert kids[1].duration_ms == pytest.approx(3.0)
+    assert gc.duration_ms == pytest.approx(1.0)
+    # coverage = child time / root time, grandchild excluded (not direct)
+    s = tr.summary()
+    assert s["span_coverage"] == pytest.approx(8.0 / 22.0)
+    assert s["n_compile_spans"] == 0
+
+
+def test_exception_unwinds_and_root_still_retained(vclock):
+    tr = Tracer(clock=vclock)
+    with pytest.raises(RuntimeError):
+        with tr.span("root"):
+            with tr.span("child"):
+                vclock.advance(0.001)
+                raise RuntimeError("boom")
+    (t,) = tr.finished()
+    assert t.root.t1 is not None
+    assert t.children_of(t.root.span_id)[0].t1 is not None
+    assert tr.current() is None               # stack fully unwound
+
+
+def test_disabled_tracer_is_the_noop_singleton(vclock):
+    tr = Tracer(enabled=False, clock=vclock)
+    assert tr.span("anything") is NOOP_SPAN
+    assert maybe_span(None, "x") is NOOP_SPAN
+    assert maybe_span(tr, "x") is NOOP_SPAN
+    assert tr.current() is None
+    tr.add_span(SpanContext("t0", 1), "x", 0.0, 1.0)   # silent no-op
+    assert tr.n_traces == 0 and tr.n_spans == 0
+    with NOOP_SPAN as sp:                     # shared, allocation-free
+        sp.set(ignored=True)
+
+
+# ---------------------------------------------------------------------------
+# cross-thread / cross-ingest-boundary linkage
+# ---------------------------------------------------------------------------
+def test_cross_thread_add_span_lands_in_origin_trace(vclock):
+    tr = Tracer(clock=vclock, slow_ms=0.0)    # retain everything (tail)
+    with tr.span("req") as sp:
+        ctx = tr.current()
+        vclock.advance(0.002)
+    err = []
+
+    def writer():
+        try:
+            tr.add_span(ctx, "writer.work", 0.002, 0.005, rows=1)
+        except Exception as e:                # pragma: no cover
+            err.append(e)
+
+    th = threading.Thread(target=writer, name="writer-0")
+    th.start()
+    th.join()
+    assert not err
+    (t,) = tr.finished()
+    (w,) = [s for s in t.spans if s.name == "writer.work"]
+    assert w.parent_id == ctx.span_id and w.thread == "writer-0"
+    assert w.duration_ms == pytest.approx(3.0)
+    assert w.attrs == {"rows": 1}
+
+
+def test_ingest_boundary_linkage_queue_time_and_commit_version(vclock):
+    """A submit during a request span must show up in THAT request's trace
+    as ``ingest.queued`` (exact virtual time-in-queue) + ``ingest.fold``
+    (carrying the committed store version), parented to the span open at
+    submit time."""
+    tr = Tracer(clock=vclock, slow_ms=0.0)
+    srv = BSEServer(_embed, None, _engine(), wire_dtype=jnp.float32,
+                    async_ingest=True, queue_depth=8, tracer=tr)
+    rt = srv.async_ingest
+    with tr.span("req") as sp:
+        vclock.advance(0.001)                 # request prologue
+        ctx = tr.current()
+        assert rt.submit_event(3, 1, 2)       # enqueued at t=0.001
+        vclock.advance(0.004)
+    vclock.advance(0.005)                     # queue dwell after root close
+    assert rt.drain_once() == 1               # fold starts at t=0.010
+    (t,) = tr.finished()
+    (q,) = [s for s in t.spans if s.name == "ingest.queued"]
+    (f,) = [s for s in t.spans if s.name == "ingest.fold"]
+    assert q.parent_id == ctx.span_id and f.parent_id == ctx.span_id
+    assert q.t0 == pytest.approx(0.001)       # enqueue time
+    assert q.duration_ms == pytest.approx(9.0)   # exact time-in-queue
+    assert q.attrs["kind"] == "event" and q.attrs["user"] == "3"
+    assert f.t0 == pytest.approx(q.t1)        # fold starts where queue ends
+    assert f.attrs["commit_version"] == rt._version
+    assert f.attrs["commit_version"] >= 1
+    # summary sees both span names
+    by_name = tr.summary()["by_name"]
+    assert by_name["ingest.queued"]["count"] == 1
+    assert by_name["ingest.fold"]["count"] == 1
+
+
+def test_sampled_out_trace_drops_late_ingest_spans_silently(vclock):
+    """Retention is decided at root close: a reservoir-evicted trace must
+    not resurrect when its async fold lands later."""
+    tr = Tracer(clock=vclock, max_sampled=1, seed=0)
+    srv = BSEServer(_embed, None, _engine(), wire_dtype=jnp.float32,
+                    async_ingest=True, queue_depth=64, tracer=tr)
+    rt = srv.async_ingest
+    for u in range(12):                       # 12 unflagged traces, 1 slot
+        with tr.span("req"):
+            rt.submit_event(u, 1, 2)
+            vclock.advance(0.001)
+    assert rt.drain_once() == 12              # folds land AFTER retention
+    assert len(tr.traces()) == 1              # reservoir bound holds
+    assert tr.n_dropped == 11
+    for t in tr.traces():                     # kept trace did get its folds
+        assert {s.name for s in t.spans} >= {"req", "ingest.queued",
+                                             "ingest.fold"}
+
+
+# ---------------------------------------------------------------------------
+# tail retention: shed / degraded traces are always kept
+# ---------------------------------------------------------------------------
+def test_every_shed_burst_trace_is_retained(vclock):
+    model, params, dcfg = _ctr_fixture()
+    # max_sampled=1: without the flagged tail these traces WOULD sample out
+    tr = Tracer(clock=vclock, max_sampled=1, seed=0)
+    srv = CTRServer.build(model, params, rate_limit=1.0, rate_burst=4,
+                          clock=vclock, tracer=tr)
+    reqs = _requests(dcfg, range(4))
+    n_shed_bursts = 0
+    for i in range(10):                       # bucket holds 4: most shed
+        out = srv.handle_requests(reqs[:2])
+        if any(s is None for s in out):
+            n_shed_bursts += 1
+    assert n_shed_bursts > 2                  # overload actually happened
+    shed_traces = [t for t in tr.finished() if "shed" in t.flags]
+    assert len(shed_traces) == n_shed_bursts  # every one retained
+    assert tr.summary()["n_retained_tail"] == n_shed_bursts
+    for t in shed_traces:                     # admission span explains it
+        (asp,) = [s for s in t.spans if s.name == "ctr.admission"]
+        assert asp.attrs["admitted"] < asp.attrs["offered"]
+
+
+def test_every_degraded_fetch_trace_is_retained(tmp_path, vclock):
+    tr = Tracer(clock=vclock, max_sampled=1, seed=0)
+    srv = _tiered(tmp_path, vclock, hot=8, tracer=tr)
+    _fill(srv, 24)                            # users 0..15 spilled cold
+    srv.store.cold = FaultyCold(srv.store.cold, vclock, fail=True)
+    for u in (0, 1):                          # cold reads fail -> degrade
+        srv.fetch_many([u])
+        vclock.advance(0.001)
+    degraded = [t for t in tr.finished() if "degraded" in t.flags]
+    assert len(degraded) == 2
+    for t in degraded:
+        assert t.root.name == "bse.fetch_many"
+        # the degraded count rides whichever span saw it (cold_read when
+        # the read raised; the fetch root when the breaker was open)
+        assert any(s.attrs and s.attrs.get("degraded") == 1
+                   for s in t.spans)
+    assert tr.summary()["n_retained_tail"] >= 2
+
+
+def test_tail_and_reservoir_bounds_hold(vclock):
+    tr = Tracer(clock=vclock, max_tail=4, max_sampled=3, seed=0)
+    for i in range(10):                       # 10 flagged roots, tail of 4
+        with tr.span("flagged"):
+            tr.flag("shed")
+            vclock.advance(0.001)
+    for i in range(10):                       # 10 plain roots, 3 slots
+        with tr.span("plain"):
+            vclock.advance(0.001)
+    s = tr.summary()
+    assert s["n_retained_tail"] == 4
+    assert s["n_retained_sampled"] == 3
+    assert s["n_dropped"] == 20 - 4 - 3
+    assert len(tr.traces()) == 7              # evictions really evict
+
+
+# ---------------------------------------------------------------------------
+# Chrome trace-event export
+# ---------------------------------------------------------------------------
+def _traced_workload(vclock):
+    tr = Tracer(clock=vclock, slow_ms=0.0)
+    for i in range(3):
+        with tr.span("req", i=i):
+            vclock.advance(0.001)
+            with tr.span("stage_a"):
+                vclock.advance(0.002)
+            ctx = tr.current()
+            vclock.advance(0.001)
+        tr.add_span(ctx, "writer.fold", vclock(), vclock() + 0.0,
+                    commit_version=i)
+    return tr
+
+
+def test_chrome_trace_is_valid_json_with_monotone_ts(tmp_path, vclock):
+    tr = _traced_workload(vclock)
+    # a cross-thread span gives the export a second tid lane
+    th = threading.Thread(
+        target=lambda: tr.add_span(
+            SpanContext(tr.finished()[0].trace_id,
+                        tr.finished()[0].root.span_id),
+            "writer.extra", 0.0, 0.001),
+        name="writer-9")
+    th.start()
+    th.join()
+    path = tr.save_chrome_trace(str(tmp_path / "trace.json"))
+    with open(path) as f:
+        doc = json.load(f)                    # valid JSON on disk
+    assert doc == json.loads(json.dumps(tr.to_chrome_trace(), default=str))
+    assert doc["displayTimeUnit"] == "ms"
+    events = doc["traceEvents"]
+    meta = [e for e in events if e["ph"] == "M"]
+    xs = [e for e in events if e["ph"] == "X"]
+    assert {e["ph"] for e in events} == {"M", "X"}
+    assert any(e["name"] == "process_name" for e in meta)
+    thread_names = {e["args"]["name"] for e in meta
+                    if e["name"] == "thread_name"}
+    assert "writer-9" in thread_names
+    by_tid = {}
+    for e in xs:
+        assert e["pid"] == 1 and e["dur"] >= 0 and e["ts"] >= 0
+        assert "trace_id" in e["args"] and "span_id" in e["args"]
+        by_tid.setdefault(e["tid"], []).append(e["ts"])
+    assert len(by_tid) >= 2                   # both threads exported
+    for ts in by_tid.values():                # monotone per thread lane
+        assert ts == sorted(ts)
+    # children carry parent links; roots don't
+    roots = [e for e in xs if "parent_id" not in e["args"]]
+    kids = [e for e in xs if "parent_id" in e["args"]]
+    assert roots and kids
+    sids = {e["args"]["span_id"] for e in xs}
+    assert all(e["args"]["parent_id"] in sids for e in kids)
+
+
+def test_report_names_slowest_traces(vclock):
+    tr = _traced_workload(vclock)
+    rep = tr.report(2)
+    assert "span coverage" in rep and "slowest 2 traces" in rep
+    assert "stage_a" in rep
+    assert Tracer(clock=vclock).report() == \
+        "tracing: no finished traces retained"
+
+
+# ---------------------------------------------------------------------------
+# exemplars: the p99 bucket points at a trace that explains it
+# ---------------------------------------------------------------------------
+def test_histogram_exemplar_nearest_bucket():
+    m = MetricsRegistry()
+    h = m.histogram("lat_ms")
+    h.observe(0.001, exemplar="fast-1")
+    h.observe(0.002, exemplar="fast-2")
+    h.observe(0.5, exemplar="slow-1")
+    assert h.exemplar(0.99) == "slow-1"
+    assert h.exemplar(0.01) == "fast-1"
+    assert m.histogram("empty").exemplar(0.5) is None
+    h2 = m.histogram("bare")
+    h2.observe(1.0)                           # no exemplar attached
+    assert h2.exemplar(0.5) is None
+
+
+def test_p99_exemplar_resolves_to_stored_trace_matching_latency():
+    model, params, dcfg = _ctr_fixture()
+    tr = Tracer(slow_ms=0.0)                  # wall clock; retain all
+    srv = CTRServer.build(model, params, tracer=tr)
+    reqs = _requests(dcfg, range(4))
+    for _ in range(6):
+        srv.handle_requests(reqs)
+    h = srv.metrics.histogram("ctr.request_ms")
+    tid = h.exemplar(0.99)
+    assert tid is not None
+    t = tr.get(tid)                           # resolves to a stored trace
+    assert t is not None and t.root.name == "ctr.request"
+    want = t.root.attrs["request_ms"]         # latency rode the trace
+    assert want > 0
+    # the trace vouches for its bucket: root span ≈ recorded latency
+    assert t.root.duration_ms >= 0.9 * want
+    assert abs(t.root.duration_ms - want) <= 0.5 * want + 0.5
+    # and the scoring stage is attributed inside it
+    assert any(s.name in ("ctr.score", "ctr.jit_compile")
+               for s in t.children_of(t.root.span_id))
+
+
+def test_compile_spans_are_attributed():
+    model, params, dcfg = _ctr_fixture()
+    tr = Tracer(slow_ms=0.0)
+    srv = CTRServer.build(model, params, tracer=tr)
+    srv.handle_requests(_requests(dcfg, range(2)))   # first shape: compiles
+    srv.handle_requests(_requests(dcfg, range(2)))   # warm: plain score
+    s = tr.summary()
+    assert s["n_compile_spans"] >= 1
+    assert s["by_name"]["ctr.score"]["count"] >= 1   # warm dispatch
+    assert srv.metrics.snapshot()["counters"]["ctr.jit_compiles"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# disabled tracing costs nothing measurable
+# ---------------------------------------------------------------------------
+def test_disabled_tracer_overhead_within_noise():
+    model, params, dcfg = _ctr_fixture()
+    reqs = _requests(dcfg, range(2))
+
+    def medians(tracer):
+        srv = CTRServer.build(model, params, tracer=tracer)
+        srv.handle_requests(reqs)             # compile outside the timing
+        lat = []
+        for _ in range(30):
+            t0 = time.perf_counter()
+            srv.handle_requests(reqs)
+            lat.append(time.perf_counter() - t0)
+        return float(np.median(lat))
+
+    base = medians(None)                      # no tracer object at all
+    off = medians(Tracer(enabled=False))      # constructed but disabled
+    # generous: the noop path must be within scheduler noise of absent
+    assert off <= 2.0 * base + 1e-3

@@ -9,7 +9,10 @@ probabilities, and the ingest block must report both latency phases with
 an accounted event balance (folded + dropped covers submitted — no event
 goes silently missing). Schema 2 additionally requires the ``slo`` section
 (open-loop Zipf+Poisson tail latency with shed/degrade rates, ISSUE 8);
-schema 1 files remain readable for back-compat with older checkouts. Thresholds (1.5x speedup, 3.5x bytes, 1e-3 AUC
+schema 3 additionally requires the ``trace`` section (span-coverage
+fraction + jit-compile span count from the traced replay, ISSUE 9) and a
+``git_rev`` stamp; schema 1/2 files remain readable for back-compat with
+older checkouts. Thresholds (1.5x speedup, 3.5x bytes, 1e-3 AUC
 gap, 1.2x under-ingest p95) are
 PR-acceptance numbers measured on dedicated hardware — this check pins the
 *schema* so a silently-skipped section can't pass CI, without making CI
@@ -51,10 +54,12 @@ def check(bench: dict) -> list[str]:
     """Validate the parsed benchmark dict; returns human-readable summary
     lines (raises Malformed on any structural problem). Schema 1 files
     (pre-SLO, ISSUE 7) stay readable; schema 2 adds the mandatory ``slo``
-    section (open-loop tail latency + shed/degrade rates, ISSUE 8)."""
+    section (open-loop tail latency + shed/degrade rates, ISSUE 8);
+    schema 3 adds the mandatory ``trace`` section (span coverage +
+    compile-span count, ISSUE 9) and the ``git_rev`` stamp."""
     schema = bench.get("schema")
-    if schema not in (1, 2):
-        raise Malformed(f"schema: expected 1 or 2, got {schema!r}")
+    if schema not in (1, 2, 3):
+        raise Malformed(f"schema: expected 1, 2 or 3, got {schema!r}")
     lines = []
 
     backends = bench.get("backends")
@@ -151,6 +156,24 @@ def check(bench: dict) -> list[str]:
         lines.append(f"slo: p50/p95/p99 {p[0]}/{p[1]}/{p[2]}ms at "
                      f"{slo['offered_rps']:.0f} rps offered "
                      f"(shed {shed:.1%}, degraded {degr:.1%})")
+
+    if schema >= 3:
+        tr = bench.get("trace")
+        if not isinstance(tr, dict):
+            raise Malformed("trace: schema 3 requires the trace section "
+                            "(span coverage of the traced request path)")
+        where = "trace"
+        cov = _num(tr, "span_coverage", lo=0.0, hi=1.0, where=where)
+        ncs = _num(tr, "n_compile_spans", lo=0, where=where)
+        _num(tr, "n_traces", lo=1, where=where)
+        _num(tr, "n_spans", lo=1, where=where)
+        rev = bench.get("git_rev")
+        if not isinstance(rev, str) or not rev:
+            raise Malformed("git_rev: schema 3 requires a non-empty "
+                            "revision stamp (or 'unknown')")
+        lines.append(f"trace: {cov:.1%} span coverage over "
+                     f"{int(tr['n_traces'])} traces, "
+                     f"{int(ncs)} compile spans (rev {rev})")
     return lines
 
 

@@ -1,0 +1,104 @@
+#!/usr/bin/env python
+"""Print the per-commit serving-benchmark trajectory.
+
+``benchmarks/table5_serving.py`` appends one summary record per run to
+``results/bench_history.jsonl`` (git_rev, generated_utc, SLO tail
+percentiles, shed rate, fused users/sec per backend, trace span coverage).
+This tool renders that history as a table so a regression between PRs is
+visible at a glance — the full ``BENCH_serving.json`` only ever holds the
+latest run.
+
+Degrades gracefully: an absent or empty history prints a hint and exits 0
+(the history only exists after the first benchmark run on a checkout); a
+single entry prints the one row with no deltas. Malformed lines are
+skipped with a warning rather than aborting — an interrupted benchmark
+must not brick the trend view.
+
+Usage: python tools/bench_trend.py [path/to/bench_history.jsonl]
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+DEFAULT_PATH = os.path.join(REPO_ROOT, "results", "bench_history.jsonl")
+
+
+def load_history(path: str) -> list[dict]:
+    """Parse the JSONL history, skipping (and warning about) bad lines."""
+    recs = []
+    with open(path) as f:
+        for i, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError:
+                print(f"bench_trend: skipping malformed line {i}",
+                      file=sys.stderr)
+                continue
+            if isinstance(rec, dict):
+                recs.append(rec)
+    return recs
+
+
+def _fmt(v, suffix: str = "") -> str:
+    if v is None:
+        return "-"
+    if isinstance(v, float):
+        return f"{v:.3f}{suffix}" if abs(v) < 100 else f"{v:.0f}{suffix}"
+    return f"{v}{suffix}"
+
+
+def _delta(cur, prev) -> str:
+    """Relative change vs the previous run, blank when not computable."""
+    if not isinstance(cur, (int, float)) or not isinstance(prev, (int, float)) \
+            or isinstance(cur, bool) or isinstance(prev, bool) or prev == 0:
+        return ""
+    pct = 100.0 * (cur - prev) / prev
+    return f" ({pct:+.1f}%)"
+
+
+def render(recs: list[dict]) -> str:
+    if not recs:
+        return ("bench_trend: no history yet — run `make bench-smoke` "
+                "(each run appends to results/bench_history.jsonl)")
+    lines = [f"bench_trend: {len(recs)} run(s) in history",
+             f"{'rev':<10} {'when':<22} {'p95_ms':<18} {'p99_ms':<18} "
+             f"{'shed':<8} {'xla_users/s':<18} {'coverage':<8}"]
+    prev = None
+    for r in recs:
+        fused = r.get("fused_users_per_sec") or {}
+        pfused = (prev.get("fused_users_per_sec") or {}) if prev else {}
+        p95 = r.get("slo_p95_ms")
+        p99 = r.get("slo_p99_ms")
+        cov = r.get("span_coverage")
+        lines.append(
+            f"{str(r.get('git_rev', '?')):<10} "
+            f"{str(r.get('generated_utc', '?')):<22} "
+            f"{_fmt(p95) + (_delta(p95, prev.get('slo_p95_ms')) if prev else ''):<18} "
+            f"{_fmt(p99) + (_delta(p99, prev.get('slo_p99_ms')) if prev else ''):<18} "
+            f"{_fmt(r.get('shed_rate')):<8} "
+            f"{_fmt(fused.get('xla')) + _delta(fused.get('xla'), pfused.get('xla')):<18} "
+            f"{_fmt(cov):<8}")
+        prev = r
+    if len(recs) == 1:
+        lines.append("(single entry — deltas appear from the second run on)")
+    return "\n".join(lines)
+
+
+def main(argv: list[str]) -> int:
+    path = argv[1] if len(argv) > 1 else DEFAULT_PATH
+    if not os.path.exists(path):
+        print(f"bench_trend: {os.path.relpath(path, REPO_ROOT)} missing — "
+              f"run `make bench-smoke` to record the first entry")
+        return 0
+    print(render(load_history(path)))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
