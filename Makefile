@@ -16,12 +16,16 @@
 # degrade/shed path fails before the full suite runs. `test-trace` does
 # the same for the observability surface (tests/test_tracing.py span
 # trees, retention and Chrome export + tests/test_export.py Prometheus
-# round-trip). `docs-check`
+# round-trip). `profile-smoke` runs tools/profile_report.py --smoke: a
+# CPU-interpret fused-serve burst through the measured-profiling layer
+# (serve/profiler.py) asserting the report renders, the memory ledger
+# conserves, and the block passes bench_check's schema-4 profile
+# validator. `docs-check`
 # verifies intra-repo doc links + kernel docstrings; it rides in the
 # default test-fast / ci paths.
 PYTHONPATH := src
 
-.PHONY: test test-fast test-faults test-trace test-full bench-smoke bench-check docs-check ci
+.PHONY: test test-fast test-faults test-trace test-full bench-smoke bench-check profile-smoke docs-check ci
 
 test:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
@@ -47,7 +51,10 @@ bench-smoke:
 bench-check:
 	python tools/bench_check.py
 
+profile-smoke:
+	PYTHONPATH=$(PYTHONPATH) python tools/profile_report.py --smoke
+
 docs-check:
 	python tools/docs_check.py
 
-ci: test bench-smoke docs-check
+ci: test bench-smoke profile-smoke docs-check

@@ -68,6 +68,19 @@ fraction and jit-compile span count into ``bench['trace']``. Every run is
 also stamped with ``git_rev`` and appended as one summary line to
 ``results/bench_history.jsonl`` — ``tools/bench_trend.py`` prints the
 per-commit p95 / users-per-sec trajectory from that history.
+
+The **profile** section (schema 4) runs a small tiered fused-serve workload
+under the measured-profiling layer (``serve/profiler.py``): a
+``KernelProfiler`` on the engine records per-dispatch block-until-ready
+times (jit warmup excluded) plus compile-time ``cost_analysis()``
+flops/bytes and the analytical roofline prediction per kernel, and a
+``MemoryLedger`` accounts HBM/host/disk bytes across every
+grow/evict/promote/demote/quantize event (conservation asserted inline).
+``bench['profile']`` carries ``per_kernel`` (time_ms / flops / bytes / ai /
+pct_peak / predicted) and ``mem`` (hot/warm/cold bytes) — so the fused-serve
+kernel's measured time sits next to its cost-model prediction on every run
+(required at schema 4 by ``tools/bench_check.py``; rendered by
+``tools/profile_report.py``).
 """
 from __future__ import annotations
 
@@ -89,11 +102,12 @@ from repro.serve.ctr_server import CTRServer
 
 
 def run(quick: bool = True):
-    bench = {"schema": 3, "quick": bool(quick),
+    bench = {"schema": 4, "quick": bool(quick),
              "generated_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ",
                                             time.gmtime()),
              "backends": {}, "quantization": {}, "roofline": {},
-             "hit_rate": {}, "ingest": {}, "slo": {}, "trace": {}}
+             "hit_rate": {}, "ingest": {}, "slo": {}, "trace": {},
+             "profile": {}}
     T = 2000
     B = 256 if quick else 1024
     n_req = 5 if quick else 20
@@ -149,6 +163,7 @@ def run(quick: bool = True):
     rows.extend(pressure_rows(quick, bench))
     rows.extend(slo_rows(quick, bench))
     rows.extend(trace_rows(quick, bench))
+    rows.extend(profile_rows(quick, bench))
     _write_bench_json(bench)
     return rows
 
@@ -475,6 +490,87 @@ def auc_parity_rows(quick: bool = True, bench: dict = None) -> list[dict]:
                         f"_(bound_1e-3)_steps={steps}_eval={n_eval}"}]
 
 
+def profile_rows(quick: bool = True, bench: dict = None) -> list[dict]:
+    """Measured roofline + memory ledger (schema 4): a small tiered
+    fused-serve workload with ``serve/profiler.py`` attached — the
+    ``KernelProfiler`` on the engine times every dispatch (block-until-ready,
+    jit warmup excluded) and captures compile-time ``cost_analysis()``
+    flops/bytes + the analytical roofline prediction per kernel; the
+    ``MemoryLedger`` accounts device/host/disk bytes across every
+    grow/evict/promote/demote/quantize/spill event, with conservation
+    (ledger == tier-reported nbytes) asserted before anything is written.
+    XLA backend: the measured-vs-predicted comparison needs the compiled
+    graph, not the interpret-mode python simulator."""
+    from repro.core.engine import EngineConfig, SDIMEngine
+    from repro.serve.bse_server import BSEServer
+    from repro.serve.metrics import MetricsRegistry
+    from repro.serve.profiler import KernelProfiler, MemoryLedger
+
+    d, L, C = 16, 32, 8
+    H = 16                         # hot capacity
+    W = 3 * H                      # working set: spills warm + cold
+    n_bursts = 8 if quick else 32
+    emb_i = jax.random.normal(jax.random.PRNGKey(11), (4000, d // 2))
+    emb_c = jax.random.normal(jax.random.PRNGKey(12), (50, d // 2))
+
+    def embed(params, items, cats):
+        return jnp.concatenate([emb_i[jnp.asarray(items) % 4000],
+                                emb_c[jnp.asarray(cats) % 50]], axis=-1)
+
+    eng = SDIMEngine(EngineConfig(m=24, tau=3, d=d, backend="xla"))
+    metrics = MetricsRegistry()
+    prof = KernelProfiler(metrics=metrics)
+    prof.attach(eng)
+    tmp = tempfile.mkdtemp(prefix="bse-profile-")
+    try:
+        srv = BSEServer(embed, None, eng, wire_dtype=jnp.float32,
+                        hot_capacity=H, warm_capacity=H, store_dir=tmp,
+                        metrics=metrics)
+        ledger = MemoryLedger(metrics=metrics)
+        ledger.attach(srv.store)
+        rng = np.random.default_rng(0)
+        hist_i = rng.integers(0, 4000, (W, L))
+        hist_c = rng.integers(0, 50, (W, L))
+        for lo in range(0, W, H):                       # encode dispatches
+            srv.ingest_histories(list(range(lo, lo + H)),
+                                 hist_i[lo:lo + H], hist_c[lo:lo + H])
+        p = 1.0 / (np.arange(1, W + 1) ** 1.1)          # Zipf(1.1) traffic
+        p /= p.sum()
+        for _ in range(n_bursts):                       # fused-serve bursts
+            us = [int(u) for u in rng.choice(W, size=H, p=p)]
+            uniq = list(dict.fromkeys(us))
+            q = embed(None, rng.integers(0, 4000, (len(uniq), C)),
+                      rng.integers(0, 50, (len(uniq), C)))
+            jax.block_until_ready(srv.serve_candidates(uniq, q))
+            srv.ingest_events(uniq, rng.integers(0, 4000, len(uniq)),
+                              rng.integers(0, 50, len(uniq)))   # update path
+        conservation = ledger.verify()
+        assert not conservation, f"memory ledger broken: {conservation}"
+        mem = ledger.snapshot()
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    per_kernel = prof.to_dict()
+    if bench is not None:
+        bench["profile"] = {"per_kernel": per_kernel, "mem": mem}
+    fused = per_kernel.get("serve_fused", {})
+    pred = fused.get("predicted", {})
+    rows = [
+        {"name": "table5/profile/serve_fused", "us_per_call":
+         1e3 * fused.get("time_ms", 0.0), "shards": 1,
+         "derived": f"measured={fused.get('time_ms', 0.0):.4f}ms"
+                    f"_predicted={pred.get('roofline_ms', 0.0):.4f}ms"
+                    f"_bound={pred.get('bottleneck', '-')}"
+                    f"_ai={fused.get('ai', 0.0):.2f}"
+                    f"_pct_peak={fused.get('pct_peak', 0.0):.3f}"
+                    f"_calls={fused.get('calls', 0)}"},
+        {"name": "table5/profile/mem_ledger", "us_per_call": 0.0,
+         "shards": 1,
+         "derived": f"hot={mem['hot_bytes']}B_warm={mem['warm_bytes']}B"
+                    f"_cold={mem['cold_bytes']}B_conservation=OK"},
+    ]
+    return rows
+
+
 def _git_rev() -> str:
     """Short commit hash of the checkout the benchmark ran in, or
     ``"unknown"`` outside a git repo / without a git binary."""
@@ -504,6 +600,9 @@ def _append_bench_history(bench: dict, root: str) -> str:
             if isinstance(d, dict) else None
         if ups is not None:
             fused[backend] = ups
+    profile = bench.get("profile") or {}
+    fused_kernel = (profile.get("per_kernel") or {}).get("serve_fused") or {}
+    mem = profile.get("mem") or {}
     rec = {
         "git_rev": bench.get("git_rev", "unknown"),
         "generated_utc": bench.get("generated_utc"),
@@ -516,6 +615,8 @@ def _append_bench_history(bench: dict, root: str) -> str:
         "fused_users_per_sec": fused,
         "span_coverage": trace.get("span_coverage"),
         "n_compile_spans": trace.get("n_compile_spans"),
+        "fused_time_ms": fused_kernel.get("time_ms"),
+        "hot_bytes": mem.get("hot_bytes"),
     }
     hist_dir = os.path.join(root, "results")
     os.makedirs(hist_dir, exist_ok=True)

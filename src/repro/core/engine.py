@@ -320,6 +320,9 @@ class SDIMEngine:
         self.backend = resolve_backend(cfg.backend)
         self.R = make_hash_family(cfg) if R is None else R
         assert self.R.shape == (cfg.m, cfg.d), (self.R.shape, cfg)
+        # measurement seam: a serve/profiler.KernelProfiler attaches here
+        # (profiler.attach(engine)); None costs one branch per dispatch.
+        self.profiler = None
 
     @property
     def interpret(self) -> bool:
@@ -330,21 +333,31 @@ class SDIMEngine:
     def _R(self, R: Optional[jax.Array]) -> jax.Array:
         return self.R if R is None else R
 
+    def _dispatch(self, kernel: str, fn, args: tuple, kwargs: dict):
+        """Every jitted dispatch funnels through here so an attached
+        ``KernelProfiler`` sees all of them (cost capture, block-until-ready
+        timing, warmup exclusion); without one it is a plain call."""
+        if self.profiler is None:
+            return fn(*args, **kwargs)
+        return self.profiler.profile(kernel, fn, args, kwargs)
+
     # ------------------------------------------------------------------
     def encode(self, seq: jax.Array, mask: Optional[jax.Array] = None,
                R: Optional[jax.Array] = None) -> jax.Array:
         """Behaviors (B, L, d) [+ mask (B, L)] -> bucket table (B, G, U, d)."""
-        return _encode(seq, mask, self._R(R), tau=self.cfg.tau,
-                       backend=self.backend, block_l=self.cfg.block_l,
-                       interpret=self.interpret)
+        return self._dispatch(
+            "encode", _encode, (seq, mask, self._R(R)),
+            dict(tau=self.cfg.tau, backend=self.backend,
+                 block_l=self.cfg.block_l, interpret=self.interpret))
 
     def query(self, q: jax.Array, table: jax.Array,
               R: Optional[jax.Array] = None) -> jax.Array:
         """Candidates (B, d)/(B, C, d) x table (B, G, U, d) -> interest with
         q's leading shape + (d,)."""
-        return _query(q, table, self._R(R), tau=self.cfg.tau,
-                      backend=self.backend, block_c=self.cfg.block_c,
-                      interpret=self.interpret)
+        return self._dispatch(
+            "query", _query, (q, table, self._R(R)),
+            dict(tau=self.cfg.tau, backend=self.backend,
+                 block_c=self.cfg.block_c, interpret=self.interpret))
 
     def attend(self, q: jax.Array, seq: jax.Array,
                mask: Optional[jax.Array] = None,
@@ -358,9 +371,11 @@ class SDIMEngine:
               R: Optional[jax.Array] = None) -> jax.Array:
         """Fused §4.4 serving path: (B, C, d) candidates vs (B, L, d)
         history in ONE call — on Pallas the bucket table never leaves VMEM."""
-        return _serve(q, seq, mask, self._R(R), tau=self.cfg.tau,
-                      backend=self.backend, block_l=self.cfg.block_l,
-                      interpret=self.interpret).astype(seq.dtype)
+        return self._dispatch(
+            "serve", _serve, (q, seq, mask, self._R(R)),
+            dict(tau=self.cfg.tau, backend=self.backend,
+                 block_l=self.cfg.block_l,
+                 interpret=self.interpret)).astype(seq.dtype)
 
     def serve_fused(self, store: jax.Array, slots, q: jax.Array,
                     present: Optional[jax.Array] = None,
@@ -372,11 +387,13 @@ class SDIMEngine:
         no materialized (B, G, U, d) intermediate. ``present`` (B,) zeroes
         absent users' interest (the ``fetch_many`` miss contract). Returns
         (B, C, d) fp32."""
-        return _serve_fused(
-            store, jnp.asarray(slots, jnp.int32),
-            None if present is None else jnp.asarray(present),
-            q, scales, self._R(R), tau=self.cfg.tau, backend=self.backend,
-            block_c=self.cfg.block_c, interpret=self.interpret)
+        return self._dispatch(
+            "serve_fused", _serve_fused,
+            (store, jnp.asarray(slots, jnp.int32),
+             None if present is None else jnp.asarray(present),
+             q, scales, self._R(R)),
+            dict(tau=self.cfg.tau, backend=self.backend,
+                 block_c=self.cfg.block_c, interpret=self.interpret))
 
     def serve_fused_sharded(self, store: jax.Array, slots, q: jax.Array,
                             present: Optional[jax.Array] = None,
@@ -398,7 +415,9 @@ class SDIMEngine:
             ctx.mesh, ctx.model_axis, self.cfg.tau, self.backend,
             self.cfg.block_c, self.interpret, scales is not None)
         args = (store,) if scales is None else (store, scales)
-        return fn(*args, slots[:, 0], slots[:, 1], present, q, self._R(R))
+        return self._dispatch(
+            "serve_fused_sharded", fn,
+            (*args, slots[:, 0], slots[:, 1], present, q, self._R(R)), {})
 
     def update(self, store: jax.Array, slots, events: jax.Array,
                mask: Optional[jax.Array] = None,
@@ -411,9 +430,11 @@ class SDIMEngine:
         ``donate=True`` hands the store buffer to XLA for in-place update —
         only safe when the caller drops its reference (INVALIDATES it)."""
         fn = _update_donated if donate else _update
-        return fn(store, jnp.asarray(slots, jnp.int32), events, mask,
-                  self._R(R), tau=self.cfg.tau, backend=self.backend,
-                  block_l=self.cfg.block_l, interpret=self.interpret)
+        return self._dispatch(
+            "update", fn,
+            (store, jnp.asarray(slots, jnp.int32), events, mask, self._R(R)),
+            dict(tau=self.cfg.tau, backend=self.backend,
+                 block_l=self.cfg.block_l, interpret=self.interpret))
 
     # ------------------------------------------------------------------
     # sharded entry points (ShardedTableStore / device-mesh serving)
@@ -437,7 +458,9 @@ class SDIMEngine:
         fn = _sharded_update_fn(ctx.mesh, ctx.model_axis, self.cfg.tau,
                                 self.backend, self.cfg.block_l,
                                 self.interpret, donate)
-        return fn(store, slots[:, 0], slots[:, 1], events, mask, self._R(R))
+        return self._dispatch(
+            "update_sharded", fn,
+            (store, slots[:, 0], slots[:, 1], events, mask, self._R(R)), {})
 
     def serve_sharded(self, q: jax.Array, seq: jax.Array,
                       mask: Optional[jax.Array] = None,
@@ -460,7 +483,8 @@ class SDIMEngine:
             mask = jnp.concatenate([mask, zeros(mask)])
         fn = _sharded_serve_fn(ctx.mesh, ctx.model_axis, self.cfg.tau,
                                self.backend, self.cfg.block_l, self.interpret)
-        out = fn(q, seq, mask, self._R(R))
+        out = self._dispatch("serve_sharded", fn,
+                             (q, seq, mask, self._R(R)), {})
         return out[:B].astype(seq.dtype)
 
 

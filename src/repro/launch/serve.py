@@ -34,6 +34,14 @@ ends the run with the slowest-5 trace breakdown. ``--trace-dir D`` also
 writes Perfetto-loadable Chrome trace-event JSON to ``D/trace.json``;
 ``--trace-slow-ms T`` always retains traces slower than T ms (shed/
 degraded/force-drained requests are always retained regardless).
+
+``--profile`` wraps the SDIM engine's dispatch sites in a kernel profiler
+(serve/profiler.py): per-dispatch block-until-ready device time (jit
+warmup excluded) plus compile-time ``cost_analysis()`` flops/bytes,
+compared against the analytical roofline (distributed/roofline.py), and a
+device-memory ledger over the table-store tiers. The run ends with the
+measured-roofline table and the ledger balance; ``--profile-dir D`` also
+writes ``D/profile.json`` (render with ``tools/profile_report.py``).
 """
 from __future__ import annotations
 
@@ -164,6 +172,16 @@ def main():
                    help="always retain traces with root latency >= this "
                         "(ms); flagged traces (shed/degraded/forced-drain) "
                         "are always retained regardless (implies --trace)")
+    p.add_argument("--profile", action="store_true",
+                   help="measured kernel profiling (serve/profiler.py): "
+                        "per-dispatch device time + compile-time "
+                        "cost_analysis flops/bytes against the analytical "
+                        "roofline, plus the device-memory ledger; prints "
+                        "the measured-roofline table at end of run")
+    p.add_argument("--profile-dir", default=None,
+                   help="write the profile block as profile.json to this "
+                        "directory (tools/profile_report.py renders it; "
+                        "implies --profile)")
     p.add_argument("--tokens", type=int, default=32, help="LM decode steps")
     p.add_argument("--sdim-kv", action="store_true",
                    help="LM: SDIM bucket-compressed KV decode")
@@ -239,6 +257,11 @@ def main():
         p.error(f"--trace/--trace-dir/--trace-slow-ms trace the CTR request "
                 f"path (recsys serving only); arch {args.arch!r} is family "
                 f"{mod.FAMILY!r}")
+    profiling = args.profile or args.profile_dir is not None
+    if mod.FAMILY != "recsys" and profiling:
+        p.error(f"--profile/--profile-dir profile the SDIM serving kernels "
+                f"(recsys serving only); arch {args.arch!r} is family "
+                f"{mod.FAMILY!r}")
     # NOTE: --micro-batch may exceed --hot-capacity: BSEServer auto-chunks
     # oversized bursts into hot-capacity-sized sub-bursts (extra dispatches,
     # same scores), so no launcher-level rejection is needed
@@ -272,6 +295,10 @@ def main():
             p.error(f"--async-ingest decouples the BSE write path, which "
                     f"only the decoupled (sdim) deployment has; arch "
                     f"{args.arch!r} serves {mode!r}")
+        if mode != "decoupled" and profiling:
+            p.error(f"--profile/--profile-dir wrap the SDIM engine dispatch "
+                    f"sites, which only the decoupled (sdim) deployment "
+                    f"has; arch {args.arch!r} serves {mode!r}")
         mesh_ctx = (build_mesh(args.shards, args.mesh, err=p.error)
                     if mode == "decoupled" else None)
         tracer = None
@@ -295,6 +322,13 @@ def main():
                                      else args.cold_deadline_ms / 1e3),
                                  tracer=tracer)
         bse = server.bse
+        profiler = ledger = None
+        if profiling:
+            from repro.serve.profiler import KernelProfiler, MemoryLedger
+            profiler = KernelProfiler(metrics=server.metrics, tracer=tracer)
+            profiler.attach(bse.engine)
+            ledger = MemoryLedger(metrics=server.metrics)
+            ledger.attach(bse.store)
         if args.async_ingest:
             bse.async_ingest.start()
         if cfg.interest.kind == "sdim":
@@ -407,6 +441,23 @@ def main():
                     os.path.join(args.trace_dir, "trace.json"))
                 print(f"chrome trace written to {out} "
                       f"(load in Perfetto / chrome://tracing)")
+        if profiler is not None:
+            print(profiler.roofline_report())
+            print(ledger.report())
+            errs = ledger.verify()
+            if errs:   # surfaced, not raised: a broken ledger must not
+                print("memory ledger MISMATCH: "   # mask the serve output
+                      + "; ".join(errs))
+            if args.profile_dir is not None:
+                import json
+                import os
+                os.makedirs(args.profile_dir, exist_ok=True)
+                out = os.path.join(args.profile_dir, "profile.json")
+                with open(out, "w") as f:
+                    json.dump({"per_kernel": profiler.to_dict(),
+                               "mem": ledger.snapshot()}, f, indent=2)
+                print(f"profile written to {out} "
+                      f"(render with tools/profile_report.py)")
     elif mod.FAMILY == "lm":
         from repro.models.lm import LMModel
 

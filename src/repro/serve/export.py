@@ -17,6 +17,13 @@ any Prometheus scraper can ingest:
     and one ``<prefix>_health_check_ok{check="..."}`` series per readiness
     check.
 
+Zero is a value, not an absence: a registered-but-never-observed histogram
+still emits its mandatory ``+Inf`` bucket plus ``_sum 0`` / ``_count 0``,
+and a zero-valued gauge (e.g. ``mem.cold_bytes`` before the first spill)
+emits an explicit ``0`` sample — scrapers distinguish "measured zero" from
+"series missing", and rate()/increase() need the zero point. Pinned by
+regression tests in tests/test_export.py (ISSUE 10 ride-along).
+
 Metric names are sanitized to the Prometheus charset (``layer.metric_ms``
 -> ``<prefix>_layer_metric_ms``). The renderer is read-only and
 allocation-light — safe to call from a sidecar thread on a live registry

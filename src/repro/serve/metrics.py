@@ -29,6 +29,12 @@ requires: ``bse.fetch_many_ms`` / ``bse.serve_candidates_ms`` /
 ``ingest.fold_ms`` / ``tier.cold_read_ms`` / ``ctr.request_ms`` histograms;
 ``tier.promotions`` / ``tier.demotions`` / ``tier.degraded`` /
 ``ctr.shed`` counters; ``ingest.queue_depth`` / ``tier.hot_fill`` gauges.
+The measured-profiling layer (``serve/profiler.py``) adds
+``kernel.<name>_ms`` histograms + a ``kernel.compiles`` counter per engine
+dispatch site, and the memory ledger exports ``mem.hot_bytes`` /
+``mem.warm_bytes`` / ``mem.cold_bytes`` / ``mem.total_bytes`` gauges —
+device/host/disk allocation by tier, updated on every grow / evict /
+promote / demote / quantize / spill event.
 All instruments are created lazily on first use, so a layer built without
 a registry simply reports nowhere (``metrics=None`` guards stay cheap).
 """

@@ -94,6 +94,10 @@ def _gather_dequant(data, scales, slots):
 
 class TableStore:
     sharded = False
+    # accounting seam: a serve/profiler.MemoryLedger sets both on attach;
+    # event sites below report allocation deltas / traffic through it
+    ledger = None
+    _ledger_key = None
 
     def __init__(self, n_groups: int, n_buckets: int, d: int,
                  capacity: int = 64, dtype: Any = jnp.float32):
@@ -116,6 +120,13 @@ class TableStore:
         self.n_nonfinite = 0
         # False = copy-on-write scatters (async ingest double-buffering)
         self.donate_writes = True
+
+    def _nbytes(self) -> int:
+        """Bytes this store holds on device right now (ledger ground truth)."""
+        n = self.data.nbytes
+        if self.quantized:
+            n += self.scales.nbytes
+        return n
 
     def _note_saturation(self, n: int) -> None:
         if n and not self.n_saturated:
@@ -191,12 +202,15 @@ class TableStore:
 
     def _grow(self) -> None:
         cap = self.capacity
+        old = self._nbytes()
         self.data = jnp.concatenate([self.data, jnp.zeros_like(self.data)])
         if self.quantized:
             self.scales = jnp.concatenate(
                 [self.scales, jnp.zeros_like(self.scales)])
         self._free[:0] = range(2 * cap - 1, cap - 1, -1)
         self.n_grows += 1
+        if self.ledger is not None:
+            self.ledger.add(self._ledger_key, self._nbytes() - old, "grow")
 
     def evict(self, user: Any) -> bool:
         """Drop a user; the zeroed slot is recycled by the next allocation."""
@@ -218,6 +232,8 @@ class TableStore:
             del self._user_of[s]
             self._free.append(s)
         self.n_evictions += len(known)
+        if self.ledger is not None:
+            self.ledger.count("evict", len(known))
         return len(known)
 
     def clear(self) -> None:
@@ -231,6 +247,8 @@ class TableStore:
             self.scales = jnp.zeros_like(self.scales)
         self.n_grows = 0
         self.n_evictions = 0
+        if self.ledger is not None:   # same-shape zeroing: allocation keeps
+            self.ledger.count("clear")
 
     # ------------------------------------------------------------------
     # rows
@@ -266,6 +284,8 @@ class TableStore:
             scatter2 = _scatter_set2 if self.donate_writes else _scatter_set2_copy
             self.data, self.scales = scatter2(
                 self.data, self.scales, slots, payload, row_scales)
+            if self.ledger is not None:
+                self.ledger.count("quantize", int(slots.shape[0]))
             return
         if self._check_range:
             rows, n = saturate_cast(rows, dtype=self.dtype)
@@ -328,6 +348,7 @@ class TableStore:
         restored store allocates exactly like the snapshotted one."""
         data = np.asarray(state["data"])
         assert data.shape[1:] == self.row_shape, (data.shape, self.row_shape)
+        old = self._nbytes()
         self.data = jnp.asarray(data, self.dtype)
         if self.quantized:
             self.scales = jnp.asarray(np.asarray(state["scales"]),
@@ -336,6 +357,8 @@ class TableStore:
         self._user_of = {s: u for u, s in self._slot_of.items()}
         self._free = [s for s in range(self.capacity - 1, -1, -1)
                       if s not in self._user_of]
+        if self.ledger is not None:   # wholesale replace: shape may differ
+            self.ledger.add(self._ledger_key, self._nbytes() - old, "restore")
 
 
 # ---------------------------------------------------------------------------
@@ -467,6 +490,9 @@ class ShardedTableStore:
 
     _note_saturation = TableStore._note_saturation
     _note_nonfinite = TableStore._note_nonfinite
+    _nbytes = TableStore._nbytes
+    ledger = None
+    _ledger_key = None
 
     @property
     def _scatter(self):
@@ -548,12 +574,15 @@ class ShardedTableStore:
 
     def grow(self) -> None:
         per = self.per_shard_capacity
+        old = self._nbytes()
         self.data = self._grow_op(self.data)
         if self.quantized:
             self.scales = self._sgrow_op(self.scales)
         for f in self._free:
             f[:0] = range(2 * per - 1, per - 1, -1)
         self.n_grows += 1
+        if self.ledger is not None:
+            self.ledger.add(self._ledger_key, self._nbytes() - old, "grow")
 
     def evict(self, user: Any) -> bool:
         """Drop a user; the zeroed slot is recycled by the next allocation."""
@@ -573,6 +602,8 @@ class ShardedTableStore:
             del self._user_of[s]
             self._free[s[0]].append(s[1])
         self.n_evictions += len(known)
+        if self.ledger is not None:
+            self.ledger.count("evict", len(known))
         return len(known)
 
     def clear(self) -> None:
@@ -589,6 +620,8 @@ class ShardedTableStore:
                                          self._scale_sharding)
         self.n_grows = 0
         self.n_evictions = 0
+        if self.ledger is not None:   # same-shape zeroing: allocation keeps
+            self.ledger.count("clear")
 
     # ------------------------------------------------------------------
     # rows
@@ -620,6 +653,8 @@ class ShardedTableStore:
                                       payload)
             self.scales = self._sscatter(self.scales, slots[:, 0],
                                          slots[:, 1], row_scales)
+            if self.ledger is not None:
+                self.ledger.count("quantize", int(slots.shape[0]))
             return
         if self._check_range:
             rows, n = saturate_cast(rows, dtype=self.dtype)
@@ -677,6 +712,7 @@ class ShardedTableStore:
         data = np.asarray(state["data"])
         assert data.shape[0] == self.n_shards, (data.shape, self.n_shards)
         assert data.shape[2:] == self.row_shape, (data.shape, self.row_shape)
+        old = self._nbytes()
         self.data = jax.device_put(jnp.asarray(data, self.dtype),
                                    self._sharding)
         if self.quantized:
@@ -689,3 +725,5 @@ class ShardedTableStore:
         self._free = [[l for l in range(per - 1, -1, -1)
                        if (k, l) not in self._user_of]
                       for k in range(self.n_shards)]
+        if self.ledger is not None:   # wholesale replace: shape may differ
+            self.ledger.add(self._ledger_key, self._nbytes() - old, "restore")

@@ -301,6 +301,10 @@ class WarmPool:
     array — so demote/promote move ~4x fewer bytes and are bit-exact (a
     row is never re-quantized by tier movement)."""
 
+    # accounting seam: a serve/profiler.MemoryLedger sets both on attach
+    ledger = None
+    _ledger_key = None
+
     def __init__(self, row_shape, dtype, capacity: int = 64,
                  quantized: bool = False):
         self.row_shape = tuple(row_shape)
@@ -311,6 +315,13 @@ class WarmPool:
                                 np.float32) if quantized else None)
         self._slot_of: dict[Any, int] = {}
         self._free = list(range(self.data.shape[0] - 1, -1, -1))
+
+    def _nbytes(self) -> int:
+        """Host bytes this pool holds right now (ledger ground truth)."""
+        n = self.data.nbytes
+        if self.quantized:
+            n += self.scales.nbytes
+        return n
 
     def __len__(self) -> int:
         return len(self._slot_of)
@@ -325,6 +336,7 @@ class WarmPool:
             scales: Optional[np.ndarray] = None) -> None:
         assert len(users) == len(rows), (len(users), rows.shape)
         assert (scales is not None) == self.quantized
+        old = self._nbytes()
         while len(self._free) < len(users):
             n = self.data.shape[0]
             self.data = np.concatenate([self.data, np.zeros_like(self.data)])
@@ -332,6 +344,8 @@ class WarmPool:
                 self.scales = np.concatenate(
                     [self.scales, np.zeros_like(self.scales)])
             self._free[:0] = range(2 * n - 1, n - 1, -1)
+        if self.ledger is not None and self._nbytes() != old:
+            self.ledger.add(self._ledger_key, self._nbytes() - old, "grow")
         for i, (u, row) in enumerate(zip(users, rows)):
             assert u not in self._slot_of, f"user {u!r} already warm"
             s = self._free.pop()
@@ -369,6 +383,8 @@ class WarmPool:
         self.data[:] = 0
         if self.quantized:
             self.scales[:] = 0
+        if self.ledger is not None:   # in-place zeroing: allocation keeps
+            self.ledger.count("clear")
 
     # ---- snapshot seam -------------------------------------------------
     def host_state(self) -> dict:
@@ -381,6 +397,7 @@ class WarmPool:
     def load_host_state(self, state: dict) -> None:
         data = np.asarray(state["data"])
         assert data.shape[1:] == self.row_shape, (data.shape, self.row_shape)
+        old = self._nbytes()
         self.data = np.array(data, self.dtype)
         if self.quantized:
             self.scales = np.array(np.asarray(state["scales"]), np.float32)
@@ -388,6 +405,8 @@ class WarmPool:
         used = set(self._slot_of.values())
         self._free = [s for s in range(self.data.shape[0] - 1, -1, -1)
                       if s not in used]
+        if self.ledger is not None:   # wholesale replace: shape may differ
+            self.ledger.add(self._ledger_key, self._nbytes() - old, "restore")
 
 
 # ---------------------------------------------------------------------------
@@ -400,6 +419,10 @@ class ColdStore:
     removed by promotion/eviction go dead in place; a segment whose live
     count hits zero is unlinked."""
 
+    # accounting seam: a serve/profiler.MemoryLedger sets both on attach
+    ledger = None
+    _ledger_key = None
+
     def __init__(self, dir: str):
         self.dir = dir
         os.makedirs(dir, exist_ok=True)
@@ -408,6 +431,12 @@ class ColdStore:
         existing = [int(os.path.basename(p)[4:-4])
                     for p in glob.glob(os.path.join(dir, "seg_*.npz"))]
         self._next = max(existing, default=-1) + 1
+
+    def _seg_nbytes(self, seg: int) -> int:
+        try:
+            return os.path.getsize(self._path(seg))
+        except OSError:
+            return 0
 
     def _path(self, seg: int) -> str:
         return os.path.join(self.dir, f"seg_{seg:08d}.npz")
@@ -439,6 +468,8 @@ class ColdStore:
             assert u not in self._seg_of, f"user {u!r} already cold"
             self._seg_of[u] = (seg, i)
         self._live[seg] = len(users)
+        if self.ledger is not None:
+            self.ledger.add(self._ledger_key, self._seg_nbytes(seg), "spill")
 
     def load_remove(self, users: Sequence[Any]
                     ) -> tuple[np.ndarray, Optional[np.ndarray]]:
@@ -471,6 +502,11 @@ class ColdStore:
             self._live[seg] -= 1
             if self._live[seg] == 0:
                 del self._live[seg]
+                # size BEFORE the unlink; the segment leaves the live set
+                # either way, so the ledger must drop it either way
+                if self.ledger is not None:
+                    self.ledger.add(self._ledger_key,
+                                    -self._seg_nbytes(seg), "unlink")
                 try:
                     os.remove(self._path(seg))
                 except OSError:
@@ -478,6 +514,9 @@ class ColdStore:
 
     def clear(self) -> None:
         for seg in list(self._live):
+            if self.ledger is not None:
+                self.ledger.add(self._ledger_key,
+                                -self._seg_nbytes(seg), "unlink")
             try:
                 os.remove(self._path(seg))
             except OSError:
@@ -498,6 +537,10 @@ class ColdStore:
             assert os.path.exists(self._path(seg)), \
                 f"cold index references missing segment {self._path(seg)}"
         self._next = max(self._live, default=self._next - 1) + 1
+        if self.ledger is not None:   # wholesale index replace: resync
+            self.ledger.set_total(
+                self._ledger_key,
+                sum(self._seg_nbytes(seg) for seg in self._live), "restore")
 
 
 # ---------------------------------------------------------------------------
@@ -596,6 +639,9 @@ class TieredTableStore:
         self.breaker = breaker
         self.metrics = metrics
         self.tracer = tracer
+        # accounting seam: serve/profiler.MemoryLedger.attach registers
+        # every tier and sets this for tier-movement traffic events
+        self.ledger = None
 
     # ------------------------------------------------------------------
     # delegated surface
@@ -778,6 +824,11 @@ class TieredTableStore:
                 self.stats.cold_promotions += len(cold_u)
                 self.stats.promote_bytes += rows.nbytes + (
                     0 if scales is None else scales.nbytes)
+                if self.ledger is not None:
+                    self.ledger.count(
+                        "promote", len(promote),
+                        moved=rows.nbytes
+                        + (0 if scales is None else scales.nbytes))
                 if self.metrics is not None:
                     self.metrics.counter("tier.promotions").inc(len(promote))
         if new_u:
@@ -826,6 +877,11 @@ class TieredTableStore:
             self.stats.demotions += k
             self.stats.demote_bytes += vrows.nbytes + (
                 0 if vscales is None else vscales.nbytes)
+            if self.ledger is not None:
+                self.ledger.count(
+                    "demote", k,
+                    moved=vrows.nbytes
+                    + (0 if vscales is None else vscales.nbytes))
             if self.metrics is not None:
                 self.metrics.counter("tier.demotions").inc(k)
 

@@ -108,6 +108,57 @@ def test_empty_registry_renders_empty_page():
     assert render_prometheus(MetricsRegistry()) == "\n"
 
 
+def test_never_observed_histogram_still_exposes_zero_series():
+    """A registered histogram with zero observations must render — the
+    mandatory +Inf bucket at 0, _sum 0 and _count 0 — so a scraper sees
+    'measured zero', not a missing series (ISSUE 10 ride-along audit)."""
+    m = MetricsRegistry()
+    m.histogram("kernel.serve_fused_ms")       # registered, never observed
+    types, samples = _parse(render_prometheus(m))
+    assert types["repro_kernel_serve_fused_ms"] == "histogram"
+    by_name = {}
+    for name, labels, value in samples:
+        by_name.setdefault(name, []).append((labels, value))
+    assert by_name["repro_kernel_serve_fused_ms_bucket"] == \
+        [('le="+Inf"', 0.0)]                   # only the mandatory bound
+    assert by_name["repro_kernel_serve_fused_ms_sum"] == [(None, 0.0)]
+    assert by_name["repro_kernel_serve_fused_ms_count"] == [(None, 0.0)]
+
+
+def test_zero_valued_gauge_renders_explicit_zero():
+    m = MetricsRegistry()
+    m.gauge("mem.cold_bytes").set(0)
+    m.counter("kernel.compiles")               # touched, never incremented
+    types, samples = _parse(render_prometheus(m))
+    assert types["repro_mem_cold_bytes"] == "gauge"
+    assert types["repro_kernel_compiles"] == "counter"
+    by_name = {name: value for name, _, value in samples}
+    assert by_name["repro_mem_cold_bytes"] == 0.0
+    assert by_name["repro_kernel_compiles"] == 0.0
+
+
+def test_memory_ledger_gauges_render_and_parse_back():
+    """mem.* gauges exported by an attached MemoryLedger survive the
+    Prometheus round-trip and agree with the ledger's own snapshot."""
+    from repro.serve.profiler import MemoryLedger
+    from repro.serve.table_store import TableStore
+
+    m = MetricsRegistry()
+    store = TableStore(2, 4, 8, capacity=2)
+    ledger = MemoryLedger(metrics=m)
+    ledger.attach(store)
+    store.assign(["u0", "u1", "u2"])           # grows -> gauges move
+    types, samples = _parse(render_prometheus(m))
+    by_name = {name: value for name, _, value in samples}
+    snap = ledger.snapshot()
+    for tier in ("hot", "warm", "cold", "total"):
+        name = f"repro_mem_{tier}_bytes"
+        assert types[name] == "gauge"
+        assert by_name[name] == float(snap[f"{tier}_bytes"])
+    assert by_name["repro_mem_hot_bytes"] > 0
+    assert by_name["repro_mem_warm_bytes"] == 0.0   # plain store: hot only
+
+
 def test_prefix_and_name_sanitization():
     m = MetricsRegistry()
     m.counter("9weird.metric-name!x").inc()

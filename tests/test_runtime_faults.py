@@ -573,7 +573,7 @@ def test_health_full_queue_unready_drops_counted():
 
 
 # ---------------------------------------------------------------------------
-# bench_check schemas 2/3: the SLO and trace sections are CI-gated
+# bench_check schemas 2/3/4: the SLO, trace and profile sections are CI-gated
 # ---------------------------------------------------------------------------
 @functools.lru_cache(maxsize=None)
 def _bench_check():
@@ -617,6 +617,18 @@ def _minimal_bench(schema=2):
         bench["git_rev"] = "abc1234"
         bench["trace"] = {"span_coverage": 0.95, "n_compile_spans": 1,
                           "n_traces": 10, "n_spans": 60}
+    if schema >= 4:
+        bench["profile"] = {
+            "per_kernel": {"serve_fused": {
+                "calls": 2, "compiles": 1, "time_ms": 0.2, "min_ms": 0.1,
+                "max_ms": 0.3, "flops": 2.8e4, "bytes": 5.1e4, "ai": 0.55,
+                "pct_peak": 0.001,
+                "predicted": {"t_compute_ms": 1e-4, "t_memory_ms": 1e-4,
+                              "t_collective_ms": 0.0, "roofline_ms": 1e-4,
+                              "bottleneck": "memory"}}},
+            "mem": {"hot_bytes": 6144, "warm_bytes": 6144, "cold_bytes": 0,
+                    "total_bytes": 12288},
+        }
     return bench
 
 
@@ -631,7 +643,7 @@ def test_bench_check_schema2_requires_slo_and_reads_schema1():
     with pytest.raises(bc.Malformed, match="slo"):
         bc.check(bad)
     with pytest.raises(bc.Malformed, match="schema"):
-        bc.check({**_minimal_bench(2), "schema": 4})
+        bc.check({**_minimal_bench(2), "schema": 5})
 
 
 def test_bench_check_schema3_requires_trace_and_git_rev():
@@ -652,6 +664,40 @@ def test_bench_check_schema3_requires_trace_and_git_rev():
     bad["trace"]["span_coverage"] = 1.5       # coverage is a fraction
     with pytest.raises(bc.Malformed, match="span_coverage"):
         bc.check(bad)
+
+
+def test_bench_check_schema4_requires_profile():
+    bc = _bench_check()
+    assert any(ln.startswith("profile:")
+               for ln in bc.check(_minimal_bench(4)))
+    # schema 3 stays readable with no profile section at all
+    assert not any(ln.startswith("profile:")
+                   for ln in bc.check(_minimal_bench(3)))
+    bad = _minimal_bench(4)
+    del bad["profile"]
+    with pytest.raises(bc.Malformed, match="profile"):
+        bc.check(bad)
+
+
+@pytest.mark.parametrize("mutate", [
+    lambda p: p.update(per_kernel={}),               # no kernels measured
+    lambda p: p.pop("mem"),                          # ledger block missing
+    lambda p: p["per_kernel"]["serve_fused"].pop("time_ms"),
+    lambda p: p["per_kernel"]["serve_fused"].update(flops=-1.0),
+    lambda p: p["per_kernel"]["serve_fused"].update(bytes=float("nan")),
+    lambda p: p["per_kernel"]["serve_fused"].update(pct_peak=1.5),
+    lambda p: p["per_kernel"]["serve_fused"].update(ai=-0.1),
+    lambda p: p["per_kernel"]["serve_fused"]["predicted"].update(
+        roofline_ms=-1.0),
+    lambda p: p["mem"].update(hot_bytes=-1),
+    lambda p: p["mem"].pop("cold_bytes"),
+])
+def test_bench_check_rejects_malformed_profile(mutate):
+    bc = _bench_check()
+    bench = _minimal_bench(4)
+    mutate(bench["profile"])
+    with pytest.raises(bc.Malformed):
+        bc.check(bench)
 
 
 @pytest.mark.parametrize("mutate", [

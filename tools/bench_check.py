@@ -11,7 +11,10 @@ goes silently missing). Schema 2 additionally requires the ``slo`` section
 (open-loop Zipf+Poisson tail latency with shed/degrade rates, ISSUE 8);
 schema 3 additionally requires the ``trace`` section (span-coverage
 fraction + jit-compile span count from the traced replay, ISSUE 9) and a
-``git_rev`` stamp; schema 1/2 files remain readable for back-compat with
+``git_rev`` stamp; schema 4 additionally requires the ``profile`` section
+(measured per-kernel time / cost_analysis flops+bytes / arithmetic
+intensity with pct_peak in [0,1], plus the memory-ledger tier bytes,
+ISSUE 10); schema 1/2/3 files remain readable for back-compat with
 older checkouts. Thresholds (1.5x speedup, 3.5x bytes, 1e-3 AUC
 gap, 1.2x under-ingest p95) are
 PR-acceptance numbers measured on dedicated hardware — this check pins the
@@ -56,10 +59,12 @@ def check(bench: dict) -> list[str]:
     (pre-SLO, ISSUE 7) stay readable; schema 2 adds the mandatory ``slo``
     section (open-loop tail latency + shed/degrade rates, ISSUE 8);
     schema 3 adds the mandatory ``trace`` section (span coverage +
-    compile-span count, ISSUE 9) and the ``git_rev`` stamp."""
+    compile-span count, ISSUE 9) and the ``git_rev`` stamp; schema 4 adds
+    the mandatory ``profile`` section (measured roofline + memory ledger,
+    ISSUE 10)."""
     schema = bench.get("schema")
-    if schema not in (1, 2, 3):
-        raise Malformed(f"schema: expected 1, 2 or 3, got {schema!r}")
+    if schema not in (1, 2, 3, 4):
+        raise Malformed(f"schema: expected 1, 2, 3 or 4, got {schema!r}")
     lines = []
 
     backends = bench.get("backends")
@@ -174,7 +179,49 @@ def check(bench: dict) -> list[str]:
         lines.append(f"trace: {cov:.1%} span coverage over "
                      f"{int(tr['n_traces'])} traces, "
                      f"{int(ncs)} compile spans (rev {rev})")
+
+    if schema >= 4:
+        lines.append(check_profile(bench.get("profile")))
     return lines
+
+
+def check_profile(profile) -> str:
+    """Validate a schema-4 ``profile`` block (also called standalone by
+    ``tools/profile_report.py --smoke``): ``per_kernel`` must be a
+    non-empty dict of kernels with non-negative time/flops/bytes/ai and
+    ``pct_peak`` in [0,1] (each ``predicted`` sub-block, when present,
+    non-negative as well), and ``mem`` must report non-negative
+    hot/warm/cold tier bytes. Returns a one-line summary; raises
+    ``Malformed`` on any structural problem."""
+    if not isinstance(profile, dict):
+        raise Malformed("profile: schema 4 requires the profile section "
+                        "(measured roofline + memory ledger)")
+    pk = profile.get("per_kernel")
+    if not isinstance(pk, dict) or not pk:
+        raise Malformed("profile.per_kernel: expected non-empty dict")
+    for name, rec in pk.items():
+        where = f"profile.per_kernel.{name}"
+        if not isinstance(rec, dict):
+            raise Malformed(f"{where}: expected dict")
+        _num(rec, "time_ms", lo=0, where=where)
+        _num(rec, "flops", lo=0, where=where)
+        _num(rec, "bytes", lo=0, where=where)
+        _num(rec, "ai", lo=0, where=where)
+        _num(rec, "pct_peak", lo=0.0, hi=1.0, where=where)
+        pred = rec.get("predicted")
+        if pred is not None:
+            if not isinstance(pred, dict):
+                raise Malformed(f"{where}.predicted: expected dict")
+            for k in ("t_compute_ms", "t_memory_ms", "roofline_ms"):
+                _num(pred, k, lo=0, where=f"{where}.predicted")
+    mem = profile.get("mem")
+    if not isinstance(mem, dict):
+        raise Malformed("profile.mem: expected dict (memory-ledger tiers)")
+    for k in ("hot_bytes", "warm_bytes", "cold_bytes"):
+        _num(mem, k, lo=0, where="profile.mem")
+    return (f"profile: {len(pk)} kernels measured, mem "
+            f"hot={int(mem['hot_bytes'])}B warm={int(mem['warm_bytes'])}B "
+            f"cold={int(mem['cold_bytes'])}B")
 
 
 def main(argv: list[str]) -> int:

@@ -3,10 +3,11 @@
 
 ``benchmarks/table5_serving.py`` appends one summary record per run to
 ``results/bench_history.jsonl`` (git_rev, generated_utc, SLO tail
-percentiles, shed rate, fused users/sec per backend, trace span coverage).
-This tool renders that history as a table so a regression between PRs is
-visible at a glance — the full ``BENCH_serving.json`` only ever holds the
-latest run.
+percentiles, shed rate, fused users/sec per backend, trace span coverage,
+and — from schema 4 on — the measured fused-serve kernel time and the
+memory-ledger hot-tier bytes). This tool renders that history as a table
+so a regression between PRs is visible at a glance — the full
+``BENCH_serving.json`` only ever holds the latest run.
 
 Degrades gracefully: an absent or empty history prints a hint and exits 0
 (the history only exists after the first benchmark run on a checkout); a
@@ -68,7 +69,8 @@ def render(recs: list[dict]) -> str:
                 "(each run appends to results/bench_history.jsonl)")
     lines = [f"bench_trend: {len(recs)} run(s) in history",
              f"{'rev':<10} {'when':<22} {'p95_ms':<18} {'p99_ms':<18} "
-             f"{'shed':<8} {'xla_users/s':<18} {'coverage':<8}"]
+             f"{'shed':<8} {'xla_users/s':<18} {'coverage':<8} "
+             f"{'fused_ms':<16} {'hot_bytes':<12}"]
     prev = None
     for r in recs:
         fused = r.get("fused_users_per_sec") or {}
@@ -76,6 +78,8 @@ def render(recs: list[dict]) -> str:
         p95 = r.get("slo_p95_ms")
         p99 = r.get("slo_p99_ms")
         cov = r.get("span_coverage")
+        # pre-schema-4 history entries simply lack these keys -> "-"
+        fms = r.get("fused_time_ms")
         lines.append(
             f"{str(r.get('git_rev', '?')):<10} "
             f"{str(r.get('generated_utc', '?')):<22} "
@@ -83,7 +87,9 @@ def render(recs: list[dict]) -> str:
             f"{_fmt(p99) + (_delta(p99, prev.get('slo_p99_ms')) if prev else ''):<18} "
             f"{_fmt(r.get('shed_rate')):<8} "
             f"{_fmt(fused.get('xla')) + _delta(fused.get('xla'), pfused.get('xla')):<18} "
-            f"{_fmt(cov):<8}")
+            f"{_fmt(cov):<8} "
+            f"{_fmt(fms) + (_delta(fms, prev.get('fused_time_ms')) if prev else ''):<16} "
+            f"{_fmt(r.get('hot_bytes')):<12}")
         prev = r
     if len(recs) == 1:
         lines.append("(single entry — deltas appear from the second run on)")
